@@ -1,0 +1,41 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import simulator as sim
+from repro.data import traces
+
+#: Instruction budget per benchmark run. The paper uses 100M-instruction
+#: SimPoints; statistics converge far earlier in the synthetic model.
+N_INSTR = 200_000
+N_MIXES = 6  # paper: 16; default trimmed for runtime (use --full for 16)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"
+
+
+def high_mixes(n=N_MIXES, cores=8, seed=0):
+    return traces.make_mixes("high", n_mixes=n, cores=cores, seed=seed)
+
+
+def ws_and_energy(mix, arch, n_instr=N_INSTR):
+    ws = sim.normalized_weighted_speedup(mix, sim.baselines.ALL_ARCHS[arch],
+                                         n_instructions=n_instr)
+    r = sim.run_system(tuple(mix), arch, n_instructions=n_instr)
+    b = sim.run_system(tuple(mix), "baseline", n_instructions=n_instr)
+    return ws, r.dram_energy_nj / b.dram_energy_nj, r, b
+
+
+def geo_mean(xs):
+    return float(np.exp(np.mean(np.log(np.asarray(xs)))))

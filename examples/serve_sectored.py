@@ -1,0 +1,40 @@
+"""Serve a small model with batched requests through the sectored decode
+path, showing the Sector Predictor driving KV fetches (deliverable b).
+
+Run: PYTHONPATH=src python examples/serve_sectored.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model
+from repro.runtime import sectored_decode
+
+cfg = configs.get("yi-6b").reduced(n_layers=2, d_model=128, n_heads=4,
+                                   n_kv_heads=2, d_ff=256, vocab=512,
+                                   head_dim=32)
+params = model.init_params(cfg, jax.random.key(0))
+B, S, NEW = 2, 10, 20
+prompt = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+
+state = sectored_decode.init_state(cfg, B, S + NEW + 256)
+k_pages = 2
+logits = None
+for i in range(S):
+    logits, state = sectored_decode.sectored_decode_step(
+        params, cfg, state, prompt[:, i:i + 1], k_pages)
+out = []
+for _ in range(NEW):
+    nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out.append(np.asarray(nxt)[:, 0])
+    logits, state = sectored_decode.sectored_decode_step(
+        params, cfg, state, nxt, k_pages)
+
+print("generated:", np.stack(out, 1))
+tbl = np.asarray(state.table)
+print("sector-history table (layer 0, head 0):",
+      np.round(tbl[0, 0, 0, :6], 3))
+print(f"KV bytes saved at 32k context: "
+      f"{sectored_decode.bytes_saved_fraction(32768):.0%}")

@@ -1,0 +1,15 @@
+"""Reproduce the paper's headline numbers (Figs. 3/9/10/13/14, Table 4).
+
+Run: PYTHONPATH=src python examples/simulate_paper.py   (~2-4 minutes)
+"""
+
+import sys
+
+from benchmarks import paper_tables
+
+for name, fn in paper_tables.ALL_TABLES:
+    if name in ("fig11", "fig15"):  # slower scans; run via benchmarks.run
+        continue
+    print(f"--- {name} ---")
+    for row in fn():
+        print(" ", row)

@@ -1,0 +1,12 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+The vision frontend is a stub: input_specs provides patch embeddings
+(backbone-only per the assignment)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=29568, vocab=152064, rope="mrope", qkv_bias=True,
+    frontend="vision",
+)

@@ -1,0 +1,12 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 — RG-LRU + local attention, 1 attn : 2 recurrent
+[arXiv:2402.19427; hf]. Local window 2048."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1,
+    d_ff=7680, vocab=256000, rope="standard", head_dim=256,
+    layer_pattern=("rec", "rec", "attn"), local_window=2048,
+    tie_embeddings=True,
+)

@@ -1,0 +1,403 @@
+"""Cycle-approximate multi-core DRAM timing simulator (paper §6.3).
+
+Stage 2 of the reproduction pipeline: consumes per-core DRAM request streams
+(produced by repro.core.predictor + repro.core.simulator flattening) and
+plays them against a DDR4 model with
+
+* per-bank state machines (open row, column/activate readiness, tRC/tRP/
+  tRTP/tWR interactions) over 4 ranks x 16 banks,
+* per-rank tFAW **power token buckets** (the Sectored Activation relaxation:
+  an ACT of s sectors costs `act_array_fraction(s)` tokens instead of 1.0),
+* a shared data bus with Variable Burst Length occupancy (beats * tCK/2),
+  optionally split into 8 sub-rank lanes (DGMS, §9). Every shared *rate*
+  resource (data bus, command bus, per-rank tFAW power budget, per-rank
+  tRRD spacing) is modeled as a monotone reservation pointer in issue-time
+  order — a leak-free token bucket: an FR-FCFS controller freely reorders
+  commands, so a bank-stalled request must never head-of-line-block a
+  shared channel, yet aggregate capacity can never be exceeded,
+* a closed-loop core model: each core advances by instruction gaps at its
+  base CPI, loads contend for 8 MSHRs (ring of outstanding completions),
+  writebacks are posted (drain-rate-bounded by the shared reservations),
+  and dependent misses (pointer chasing) serialize on the previous miss.
+
+Everything is a single ``lax.scan`` over requests in adaptive global order
+(the earliest-issuable core goes next). Time is kept in **integer 1/16-ns
+units** (int32; JAX runs in 32-bit mode) — every DDR4-1600 parameter is an
+exact multiple of 1/16 ns, so event order can never be corrupted by float
+roundoff. Instruction-gap * CPI products are precomputed host-side in
+float64 and handed to the scan as integer deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import power
+from repro.core.timing import DDR4Timing, DEFAULT_TIMING
+
+INF = jnp.int32(2**30)
+UNITS_PER_NS = 16
+MSHRS = 8  # per-core miss buffers (paper Table 2)
+CTRL_NS = 20.0  # controller + on-chip network round trip
+FAW_SCALE = 1 << 16  # legacy fixed-point scale (unused; costs are time units)
+NUM_BANKS = 64
+RANKS = 4
+NUM_LANES = 8  # data-bus lanes; 1 used normally, 8 for sub-ranked DGMS
+SCAN_BUCKET = 8192  # scan length rounded up for compile reuse
+BUS_CAP_U = 160  # data-bus token capacity: 2 full 8-beat bursts (1/16 ns)
+CMD_CAP_U = 100  # command-bus token capacity: 4 slots
+
+
+def _reserve(ptr, now, cost, cap):
+    """Monotone reservation pointer == leak-free token bucket (rate 1).
+
+    ``ptr`` is the time by which all prior reservations are repaid. A request
+    arriving at (monotone) ``now`` with ``cost`` units of resource time is
+    granted at ``max(now, ptr - (cap - cost))`` — i.e. up to ``cap`` units
+    may be outstanding at once (burst absorption), beyond that the grant is
+    rate-limited. Returns (grant, new_ptr). Because ``now`` is globally
+    monotone (requests are processed in issue order) this is exact bucket
+    semantics with no replenish double-counting.
+    """
+    grant = jnp.maximum(now, ptr - (cap - cost))
+    new_ptr = jnp.maximum(ptr, grant) + cost
+    return grant, new_ptr
+
+
+def _u(ns: float) -> int:
+    v = ns * UNITS_PER_NS
+    assert abs(v - round(v)) < 1e-9, ns
+    return int(round(v))
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingU:
+    """Integer 1/16-ns timing derived from DDR4Timing."""
+
+    tRCD: int
+    tRAS: int
+    tRC: int
+    tRP: int
+    tCL: int
+    tCWL: int
+    tFAW: int
+    tRRD: int
+    tCCD: int
+    tWR: int
+    tRTP: int
+    tCK: int
+    ctrl: int
+    faw_cap: int  # reservation capacity (burst absorption), 1/16-ns units
+
+    @classmethod
+    def from_timing(cls, t: DDR4Timing = DEFAULT_TIMING) -> "TimingU":
+        return cls(
+            tRCD=_u(t.tRCD), tRAS=_u(t.tRAS), tRC=_u(t.tRC), tRP=_u(t.tRP),
+            tCL=_u(t.tCL), tCWL=_u(t.tCWL), tFAW=_u(t.tFAW),
+            tRRD=_u(t.tRRD), tCCD=_u(t.tCCD), tWR=_u(t.tWR),
+            tRTP=_u(t.tRTP), tCK=_u(t.tCK), ctrl=_u(CTRL_NS),
+            faw_cap=int(round(t.faw_burst_acts * _u(t.tFAW) / t.faw_acts)),
+        )
+
+    @property
+    def beat(self) -> int:
+        return self.tCK // 2
+
+
+@dataclasses.dataclass
+class RequestStream:
+    """Padded per-core request arrays, all shaped (C, R) unless noted."""
+
+    gap_u: np.ndarray  # int32 core-time delta since previous request (units)
+    bank: np.ndarray  # int32 in [0, 64)
+    row: np.ndarray  # int32
+    bus_u: np.ndarray  # int32 data-bus occupancy (incl. burst multiplier)
+    cmd_u: np.ndarray  # int32 command-bus occupancy
+    lane: np.ndarray  # int32 data-bus lane (0 unless sub-ranked)
+    col_serial_u: np.ndarray  # int32 extra serialized column time (FGA)
+    faw_cost: np.ndarray  # int32 tFAW tokens (FAW_SCALE fixed point)
+    e_act_nj: np.ndarray  # float32 activation energy if this request ACTs
+    e_col_nj: np.ndarray  # float32 RD/WR burst energy (always paid)
+    is_write: np.ndarray  # bool
+    dep: np.ndarray  # bool: issue depends on previous request's completion
+    data_bytes: np.ndarray  # (C, R) useful bytes moved on the channel
+    n_req: np.ndarray  # (C,) int32 valid requests per core
+    tail_u: np.ndarray  # (C,) int64 core time after its last request (units)
+    n_instructions: np.ndarray  # (C,) int64 instructions in the slice
+
+
+@dataclasses.dataclass
+class SimResult:
+    runtime_ps: np.ndarray  # (C,) per-core completion time (picoseconds)
+    ipc: np.ndarray  # (C,)
+    e_act_nj: float
+    e_rdwr_nj: float
+    e_background_nj: float
+    e_refresh_nj: float
+    read_latency_ns: float
+    row_hit_rate: float
+    faw_stall_frac: float  # tFAW-induced ACT delay / total time
+    n_acts: int
+    n_requests: int
+    bytes_on_bus: float
+    total_ps: int
+    bus_wait_ns: float = 0.0  # mean per-request data-bus wait
+    bank_wait_ns: float = 0.0  # mean per-request bank wait
+    conflict_rate: float = 0.0  # row-buffer conflicts / requests
+
+    @property
+    def dram_energy_nj(self) -> float:
+        return (self.e_act_nj + self.e_rdwr_nj + self.e_background_nj
+                + self.e_refresh_nj)
+
+
+@functools.partial(jax.jit, static_argnames=("timing", "n_steps"))
+def _run(streams, timing: TimingU, n_steps: int):
+    (gap_u, bank, row, bus_u, cmd_u, lane, col_serial_u, faw_cost, e_act,
+     e_col, is_write, dep, n_req) = streams
+    C, R = gap_u.shape
+
+    state = dict(
+        ptr=jnp.zeros((C,), jnp.int32),
+        last_issue=jnp.zeros((C,), jnp.int32),
+        prev_done=jnp.zeros((C,), jnp.int32),
+        ring=jnp.zeros((C, MSHRS), jnp.int32),
+        ring_pos=jnp.zeros((C,), jnp.int32),
+        open_row=jnp.full((NUM_BANKS,), -1, jnp.int32),
+        col_ready=jnp.zeros((NUM_BANKS,), jnp.int32),
+        act_ready=jnp.zeros((NUM_BANKS,), jnp.int32),
+        rrd_ptr=jnp.zeros((RANKS,), jnp.int32),
+        faw_ptr=jnp.zeros((RANKS,), jnp.int32),
+        bus_ptr=jnp.zeros((NUM_LANES,), jnp.int32),
+        cmd_ptr=jnp.zeros((), jnp.int32),
+        # accumulators
+        acc_e_act=jnp.zeros((), jnp.float32),
+        acc_e_col=jnp.zeros((), jnp.float32),
+        acc_lat_ns=jnp.zeros((), jnp.int32),
+        acc_loads=jnp.zeros((), jnp.int32),
+        acc_acts=jnp.zeros((), jnp.int32),
+        acc_hits=jnp.zeros((), jnp.int32),
+        acc_faw_ns=jnp.zeros((), jnp.int32),
+        acc_bus_ns=jnp.zeros((), jnp.int32),   # waiting for the data bus
+        acc_bank_ns=jnp.zeros((), jnp.int32),  # waiting for bank readiness
+        acc_conf=jnp.zeros((), jnp.int32),     # row-buffer conflicts
+        t_max=jnp.zeros((), jnp.int32),
+    )
+
+    cidx = jnp.arange(C)
+
+    def gather(a, ptr):
+        return a[cidx, jnp.clip(ptr, 0, R - 1)]
+
+    def step(s, _):
+        ptr = s["ptr"]
+        active = ptr < n_req
+        gap = gather(gap_u, ptr)
+        wr = gather(is_write, ptr)
+        dp = gather(dep, ptr)
+        t_core = s["last_issue"] + gap
+        oldest = s["ring"][cidx, s["ring_pos"]]
+        # Writes are posted (no MSHR slot, no pipeline stall): they issue at
+        # the core's virtual time. Keeping write issue times monotone with
+        # the rest of the core's stream is what keeps the global scan order
+        # time-sorted, which the shared-resource reservation pointers
+        # require. Their drain rate is bounded by the same bank/rank/bus
+        # reservations every request pays.
+        t_cand = jnp.maximum(t_core, jnp.where(wr, 0, oldest))
+        t_cand = jnp.maximum(t_cand, jnp.where(dp, s["prev_done"], 0))
+        t_cand = jnp.where(active, t_cand, INF)
+        c = jnp.argmin(t_cand)
+        t = t_cand[c]
+        p = jnp.clip(ptr[c], 0, R - 1)
+
+        b = bank[c, p]
+        rw = row[c, p]
+        rank = b >> 4
+        r_bus = bus_u[c, p]
+        r_cmd = cmd_u[c, p]
+        r_lane = lane[c, p]
+        r_colser = col_serial_u[c, p]
+        r_cost = faw_cost[c, p]
+        r_eact = e_act[c, p]
+        r_ecol = e_col[c, p]
+        r_wr = is_write[c, p]
+
+        hit = s["open_row"][b] == rw
+        conflict = (s["open_row"][b] >= 0) & ~hit
+
+        # --- activate path (row miss / conflict) ---------------------------
+        act_earliest = jnp.maximum(t, s["act_ready"][b]) + jnp.where(
+            conflict, timing.tRP, 0
+        )
+        # Rank-level budgets (tFAW power, tRRD spacing) are reserved in the
+        # monotone issue-time domain: request processing follows issue order
+        # while actual ACT times are scattered by bank queueing, and a bank-
+        # stalled request must not head-of-line-block its rank. r_cost is the
+        # ACT's power-time cost: act_array_fraction(sectors) * tFAW/4 —
+        # Sectored Activation's relaxation makes cheap ACTs reserve less.
+        grant_faw, faw_ptr_new = _reserve(
+            s["faw_ptr"][rank], t, r_cost, timing.faw_cap
+        )
+        grant_rrd, rrd_ptr_new = _reserve(
+            s["rrd_ptr"][rank], t, timing.tRRD, 2 * timing.tRRD
+        )
+        act_t = jnp.maximum(
+            jnp.maximum(act_earliest, grant_faw), grant_rrd
+        )
+        faw_delay = jnp.maximum(
+            jnp.maximum(grant_faw, grant_rrd) - act_earliest, 0
+        )
+
+        # --- column access ---------------------------------------------------
+        col_ready = jnp.where(
+            hit, jnp.maximum(t, s["col_ready"][b]), act_t + timing.tRCD
+        )
+        grant_cmd, cmd_ptr_new = _reserve(s["cmd_ptr"], t, r_cmd, CMD_CAP_U)
+        col_t = jnp.maximum(col_ready, grant_cmd)
+        data_lat = jnp.where(r_wr, timing.tCWL, timing.tCL)
+        grant_bus, bus_ptr_new = _reserve(
+            s["bus_ptr"][r_lane], t, r_bus, BUS_CAP_U
+        )
+        data_start = jnp.maximum(col_t + data_lat + r_colser, grant_bus)
+        data_end = data_start + r_bus
+        t_done = data_end + timing.ctrl
+
+        # --- state updates ----------------------------------------------------
+        new = dict(s)
+        new["open_row"] = s["open_row"].at[b].set(rw)
+        new["col_ready"] = s["col_ready"].at[b].set(
+            col_t + timing.tCCD + r_colser
+        )
+        # earliest future ACT in this bank: row stays open >= tRAS after ACT,
+        # column activity needs tRTP/tWR before PRE, then tRP.
+        # act_ready = earliest PRE completion point for this bank (tRP for a
+        # future conflict is charged once, in the activate path above).
+        pre_after_col = col_t + jnp.where(
+            r_wr, data_lat + r_bus + timing.tWR, timing.tRTP
+        )
+        act_ready_new = jnp.maximum(
+            jnp.where(hit, s["act_ready"][b], act_t + timing.tRAS),
+            pre_after_col,
+        )
+        new["act_ready"] = s["act_ready"].at[b].set(act_ready_new)
+        new["rrd_ptr"] = jnp.where(
+            hit, s["rrd_ptr"], s["rrd_ptr"].at[rank].set(rrd_ptr_new)
+        )
+        new["faw_ptr"] = jnp.where(
+            hit, s["faw_ptr"], s["faw_ptr"].at[rank].set(faw_ptr_new)
+        )
+        new["bus_ptr"] = s["bus_ptr"].at[r_lane].set(bus_ptr_new)
+        new["cmd_ptr"] = cmd_ptr_new
+
+        # core bookkeeping. Core virtual time advances to the issue point for
+        # loads (a blocked miss stalls the pipeline), but a write-queue-
+        # stalled writeback must not hold back the core's subsequent loads:
+        # writebacks come from the cache hierarchy, not the pipeline.
+        new["ptr"] = ptr.at[c].add(1)
+        new["last_issue"] = s["last_issue"].at[c].set(
+            jnp.where(r_wr, t_core[c], t)
+        )
+        new["prev_done"] = s["prev_done"].at[c].set(jnp.where(r_wr, t, t_done))
+        # loads occupy an MSHR slot until completion
+        rpos = s["ring_pos"][c]
+        new["ring"] = jnp.where(
+            r_wr, s["ring"], s["ring"].at[c, rpos].set(t_done)
+        )
+        new["ring_pos"] = jnp.where(
+            r_wr, s["ring_pos"], s["ring_pos"].at[c].set((rpos + 1) % MSHRS)
+        )
+
+        # accumulators
+        new["acc_e_act"] = s["acc_e_act"] + jnp.where(hit, 0.0, r_eact)
+        new["acc_e_col"] = s["acc_e_col"] + r_ecol
+        new["acc_lat_ns"] = s["acc_lat_ns"] + jnp.where(
+            r_wr, 0, (t_done - t) // UNITS_PER_NS
+        )
+        new["acc_loads"] = s["acc_loads"] + jnp.where(r_wr, 0, 1)
+        new["acc_acts"] = s["acc_acts"] + jnp.where(hit, 0, 1)
+        new["acc_hits"] = s["acc_hits"] + jnp.where(hit, 1, 0)
+        new["acc_faw_ns"] = s["acc_faw_ns"] + jnp.where(
+            hit, 0, faw_delay // UNITS_PER_NS
+        )
+        bus_wait = (data_start - (col_t + data_lat)) + (col_t - col_ready)
+        bank_wait = jnp.where(
+            hit, jnp.maximum(s["col_ready"][b] - t, 0),
+            jnp.maximum(s["act_ready"][b] - t, 0),
+        )
+        new["acc_bus_ns"] = s["acc_bus_ns"] + bus_wait // UNITS_PER_NS
+        new["acc_bank_ns"] = s["acc_bank_ns"] + bank_wait // UNITS_PER_NS
+        new["acc_conf"] = s["acc_conf"] + jnp.where(conflict, 1, 0)
+        new["t_max"] = jnp.maximum(s["t_max"], t_done)
+
+        # steps past the real request count are no-ops (bucketed scan length)
+        valid = t < INF // 2
+        new = jax.tree.map(lambda o, n_: jnp.where(valid, n_, o), s, new)
+        return new, None
+
+    final, _ = jax.lax.scan(step, state, None, length=n_steps)
+    return final
+
+
+def simulate(stream: RequestStream, timing: DDR4Timing = DEFAULT_TIMING,
+             energy: power.DRAMEnergyModel | None = None) -> SimResult:
+    """Run the timing simulation and assemble energies/metrics."""
+    energy = energy or power.DRAMEnergyModel(timing)
+    tu = TimingU.from_timing(timing)
+    arrs = (
+        jnp.asarray(stream.gap_u), jnp.asarray(stream.bank),
+        jnp.asarray(stream.row), jnp.asarray(stream.bus_u),
+        jnp.asarray(stream.cmd_u), jnp.asarray(stream.lane),
+        jnp.asarray(stream.col_serial_u),
+        jnp.asarray(stream.faw_cost), jnp.asarray(stream.e_act_nj),
+        jnp.asarray(stream.e_col_nj), jnp.asarray(stream.is_write),
+        jnp.asarray(stream.dep), jnp.asarray(stream.n_req),
+    )
+    n_steps = int(np.sum(stream.n_req))
+    n_padded = ((n_steps + SCAN_BUCKET - 1) // SCAN_BUCKET) * SCAN_BUCKET
+    final = jax.device_get(_run(arrs, tu, n_padded))
+
+    C = stream.gap_u.shape[0]
+    unit_ps = 1000 // UNITS_PER_NS  # 62.5 -> use exact: 1000/16
+    runtime_ps = np.zeros((C,), np.int64)
+    for c in range(C):
+        done_u = max(int(final["last_issue"][c]), int(final["ring"][c].max()))
+        runtime_ps[c] = (done_u + int(stream.tail_u[c])) * 1000 // UNITS_PER_NS
+    total_ps = int(final["t_max"]) * 1000 // UNITS_PER_NS
+    total_ps = max(total_ps, int(runtime_ps.max()) if C else 0)
+    del unit_ps
+
+    # IPC = instructions / cycles; cycle = 1000/3.6 ps (3.6 GHz core clock)
+    cycle_ps = 1000.0 / 3.6
+    ipc = stream.n_instructions / np.maximum(runtime_ps / cycle_ps, 1.0)
+
+    total_s = total_ps * 1e-12
+    e_bg = (energy.p_background_active * RANKS) * total_s * 1e9
+    e_ref = energy.p_refresh * RANKS * total_s * 1e9
+    n_loads = max(int(final["acc_loads"]), 1)
+    valid_mask = (np.arange(stream.bus_u.shape[1])[None, :]
+                  < stream.n_req[:, None])
+    bytes_on_bus = float(np.sum(stream.data_bytes * valid_mask))
+    return SimResult(
+        runtime_ps=runtime_ps,
+        ipc=ipc,
+        e_act_nj=float(final["acc_e_act"]),
+        e_rdwr_nj=float(final["acc_e_col"]),
+        e_background_nj=float(e_bg),
+        e_refresh_nj=float(e_ref),
+        read_latency_ns=float(final["acc_lat_ns"]) / n_loads,
+        row_hit_rate=float(final["acc_hits"]) / max(n_steps, 1),
+        faw_stall_frac=float(final["acc_faw_ns"]) * UNITS_PER_NS
+        / max(int(final["t_max"]), 1),
+        n_acts=int(final["acc_acts"]),
+        n_requests=n_steps,
+        bytes_on_bus=bytes_on_bus,
+        total_ps=total_ps,
+        bus_wait_ns=float(final["acc_bus_ns"]) / max(n_steps, 1),
+        bank_wait_ns=float(final["acc_bank_ns"]) / max(n_steps, 1),
+        conflict_rate=float(final["acc_conf"]) / max(n_steps, 1),
+    )

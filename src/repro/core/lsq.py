@@ -1,0 +1,86 @@
+"""LSQ Lookahead (paper §5.3.1).
+
+LSQ Lookahead accumulates the cache-block word offsets referenced by younger
+in-flight load/store instructions into an older instruction's miss request:
+when a load misses, every LSQ entry within the lookahead window that targets
+the same block contributes its word bit to the request's sector bits.
+
+In the episode model a word's visibility is its instruction distance from the
+request that triggers the fetch: word *j* is merged into a request issued at
+distance *d* iff ``d <= dist_j <= d + window`` (it sits in the LSQ — allocated
+but not yet beyond the miss — when the miss issues).
+
+``cluster_requests`` computes the full fetch schedule of an episode: the
+initial miss (possibly augmented by the Sector Predictor) plus the sequence
+of *sector-miss* requests, each of which again merges its own lookahead
+window. This is exactly the iterative process the memory controller sees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sectors import NUM_SECTORS, compress_mask, popcount8
+
+DIST_INF = jnp.int32(2**30)
+MAX_EXTRA = NUM_SECTORS  # an episode can at most sector-miss once per word
+
+
+def la_mask(dist: jax.Array, window) -> jax.Array:
+    """Sector bits visible in the LSQ at the initial miss (distance 0):
+    words first referenced within ``window`` instructions. The triggering
+    word itself has distance 0 and is always included."""
+    return compress_mask(dist <= jnp.int32(window))
+
+
+def round_to_halves(mask: jax.Array) -> jax.Array:
+    """Burst-chop granularity (§8.4): any enabled sector pulls in its whole
+    half-block (sectors 0-3 / 4-7)."""
+    lo = jnp.where((mask & 0x0F) != 0, jnp.uint32(0x0F), jnp.uint32(0))
+    hi = jnp.where((mask & 0xF0) != 0, jnp.uint32(0xF0), jnp.uint32(0))
+    return lo | hi
+
+
+def cluster_requests(used_mask: jax.Array, dist: jax.Array, m0: jax.Array,
+                     window, chop: bool = False):
+    """Fetch schedule after the initial request ``m0``.
+
+    Words in ``used_mask`` not covered by ``m0`` cause sector misses. Each
+    sector miss fires at the distance of its earliest uncovered word (the
+    *leader*) and merges every still-uncovered word within ``window``
+    instructions after the leader (LSQ Lookahead at the sector miss).
+
+    Returns ``(n_extra, extra_masks[8] uint32, extra_dists[8] int32)``;
+    unused slots have mask 0 / dist DIST_INF.
+    """
+    window = jnp.int32(window)
+    m0 = m0.astype(jnp.uint32)
+
+    def body(carry, _):
+        fetched, = carry
+        uncovered = used_mask.astype(jnp.uint32) & ~fetched
+        ubits = ((uncovered[..., None] >> jnp.arange(NUM_SECTORS, dtype=jnp.uint32)) & 1).astype(bool)
+        d = jnp.where(ubits, dist, DIST_INF)
+        leader_d = jnp.min(d, axis=-1)
+        any_left = uncovered != 0
+        clu = compress_mask((d >= leader_d[..., None]) & (d <= leader_d[..., None] + window))
+        clu = jnp.where(any_left, clu, jnp.uint32(0))
+        fetch = round_to_halves(clu) if chop else clu
+        fetch = jnp.where(any_left, fetch, jnp.uint32(0))
+        new_fetched = fetched | fetch
+        out_d = jnp.where(any_left, leader_d, DIST_INF)
+        return (new_fetched,), (fetch, out_d)
+
+    (final_fetched,), (masks, dists) = jax.lax.scan(
+        body, (m0,), None, length=MAX_EXTRA
+    )
+    n_extra = jnp.sum((masks != 0).astype(jnp.int32), axis=0)
+    del final_fetched
+    return n_extra, masks, dists
+
+
+def extra_words_basic(used_mask: jax.Array) -> jax.Array:
+    """Sector misses of the *basic* configuration (single-word fetches, no
+    LA, no SP): one extra DRAM access per used word beyond the first."""
+    return popcount8(used_mask) - 1

@@ -1,0 +1,24 @@
+"""Performance metrics (paper §6.3): parallel speedup, weighted speedup,
+MPKI accounting, and energy aggregation."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def parallel_speedup(baseline_single_runtime_ps: float,
+                     multicore_runtime_ps: np.ndarray) -> float:
+    """Baseline single-core execution time / multi-core execution time.
+
+    The multi-core run finishes when its slowest core finishes.
+    """
+    return float(baseline_single_runtime_ps) / float(np.max(multicore_runtime_ps))
+
+
+def weighted_speedup(shared_ipc: np.ndarray, alone_ipc: np.ndarray) -> float:
+    """Sum_i IPC_i(shared) / IPC_i(alone) [Snavely & Tullsen]."""
+    return float(np.sum(np.asarray(shared_ipc) / np.asarray(alone_ipc)))
+
+
+def llc_mpki(n_misses: int, n_instructions: int) -> float:
+    return 1000.0 * n_misses / max(n_instructions, 1)

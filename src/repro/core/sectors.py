@@ -1,0 +1,77 @@
+"""Sector bitmask utilities (Sectored DRAM §4).
+
+A *sector* is 1/8 of a DRAM row's MAT set == one 64-bit word of a 64 B cache
+block (with 8 chips x 8 sectors, one sector from each chip stores one word).
+Sector sets are represented as uint8 bitmasks throughout the simulator: bit i
+set => word/sector i enabled.
+
+The DRAM-side hardware budget (paper §4.1/§8.2): sector bits ride in unused
+bits of the PRE command encoding -- up to 14 bits per PRE, so 8 sectors fit
+with 6 bits to spare. ``encode_pre``/``decode_pre`` model that packing and are
+used by tests to check the interface contract the paper relies on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NUM_SECTORS = 8  # MATs per subarray == words per 64B cache block (paper Table 2)
+WORD_BYTES = 8  # one sector of a cache block, transferred in one burst beat
+BLOCK_BYTES = NUM_SECTORS * WORD_BYTES  # 64 B cache block
+PRE_SPARE_BITS = 14  # unused DDR4 PRE-command bits available for sector bits
+
+FULL_MASK = (1 << NUM_SECTORS) - 1  # 0xFF: all sectors enabled (coarse-grained)
+
+
+def popcount8(mask: jax.Array) -> jax.Array:
+    """Population count of a uint8/int32 sector mask (the paper's 34-gate
+    popcount circuit, §4.2). Works on any integer array."""
+    m = mask.astype(jnp.uint32)
+    m = m - ((m >> 1) & 0x55555555)
+    m = (m & 0x33333333) + ((m >> 2) & 0x33333333)
+    m = (m + (m >> 4)) & 0x0F0F0F0F
+    return ((m * 0x01010101) >> 24).astype(jnp.int32)
+
+
+def mask_from_offset(word_offset: jax.Array) -> jax.Array:
+    """Single-word sector mask for a load/store touching ``word_offset``."""
+    return (jnp.uint32(1) << word_offset.astype(jnp.uint32)).astype(jnp.uint32)
+
+
+def mask_from_offsets(word_offsets: jax.Array, valid: jax.Array) -> jax.Array:
+    """OR of single-word masks for a batch of (offset, valid) pairs."""
+    bits = jnp.where(valid, mask_from_offset(word_offsets), 0)
+    return jax.lax.reduce_or(bits.astype(jnp.uint32), axes=tuple(range(bits.ndim)))
+
+
+def burst_length(mask: jax.Array) -> jax.Array:
+    """Variable Burst Length (§4.2): beats in the data burst == popcount of the
+    sector mask. The 8x3 encoder walks only enabled Read-FIFO entries."""
+    return popcount8(mask)
+
+
+def encode_pre(row_bits: jax.Array, sector_mask: jax.Array) -> jax.Array:
+    """Pack sector bits into the spare field of a PRE command word (§4.1)."""
+    return (row_bits.astype(jnp.uint32) << PRE_SPARE_BITS) | (
+        sector_mask.astype(jnp.uint32) & FULL_MASK
+    )
+
+
+def decode_pre(pre_word: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`encode_pre` -> (row_bits, sector_mask)."""
+    mask = pre_word.astype(jnp.uint32) & FULL_MASK
+    row = pre_word.astype(jnp.uint32) >> PRE_SPARE_BITS
+    return row, mask
+
+
+def expand_mask(mask: jax.Array) -> jax.Array:
+    """uint mask -> (..., 8) boolean per-sector array."""
+    bits = jnp.arange(NUM_SECTORS, dtype=jnp.uint32)
+    return ((mask[..., None].astype(jnp.uint32) >> bits) & 1).astype(jnp.bool_)
+
+
+def compress_mask(bits: jax.Array) -> jax.Array:
+    """(..., 8) boolean per-sector array -> uint mask."""
+    weights = (jnp.uint32(1) << jnp.arange(NUM_SECTORS, dtype=jnp.uint32))
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1)

@@ -1,0 +1,105 @@
+"""DDR4 timing model + Sectored DRAM's tFAW relaxation (paper §2.4, §4.1).
+
+All times are in nanoseconds (float32 inside jitted code). Values follow the
+paper's Table 2 system configuration: DDR4, 1600 MHz bus, 1 channel, 4 ranks,
+16 banks/rank, tRCD/tRAS/tRC/tFAW = 13.75/35.00/48.75/25 ns.
+
+The tFAW relaxation is modeled as a *power token bucket* per rank: the DDR4
+spec's "at most 4 ACTs in any tFAW window" is equivalently a budget that
+replenishes at 4 row-activations' worth of charge per tFAW. A sectored ACT
+draws only ``act_array_power_fraction(s)`` of a full row activation's array
+power (§7.1 / Fig. 9), so it costs proportionally fewer tokens — letting the
+controller legally schedule ACTs at a higher rate, exactly the mechanism the
+paper credits for its latency/performance win.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DDR4Timing:
+    """DDR4-1600 timing parameters (ns), per paper Table 2 / JEDEC DDR4.
+
+    The paper's Table 2 reads "1600 MHz bus frequency": DDR4-1600
+    (1600 MT/s, 800 MHz clock): tCK = 1.25 ns, so a full 8-beat burst
+    occupies 5 ns and one channel moves at most 12.8 GB/s — which is what
+    makes the coarse-grained baseline channel-bound for 8-core high-MPKI
+    mixes, the regime the paper's headline results live in.
+    """
+
+    tCK: float = 1.25  # bus clock period (800 MHz clock, 1600 MT/s)
+    tRCD: float = 13.75  # ACT -> column command
+    tRAS: float = 35.00  # ACT -> PRE to the same bank
+    tRC: float = 48.75  # ACT -> ACT same bank (tRAS + tRP)
+    tRP: float = 13.75  # PRE -> ACT
+    tCL: float = 13.75  # READ -> first data beat (CAS latency, 11 cycles)
+    tCWL: float = 12.50  # WRITE -> first data beat
+    tFAW: float = 25.0  # four-activate window per rank
+    tRRD: float = 2.5  # ACT -> ACT same rank (tRRD_S; bank-group interleaved)
+    tCCD: float = 5.0  # column command -> column command (tCCD_L, 8 tCK)
+    tWR: float = 15.0  # write recovery before PRE
+    tRTP: float = 7.5  # READ -> PRE
+    tREFI: float = 7800.0  # refresh interval
+    tRFC: float = 350.0  # refresh cycle time
+    faw_acts: int = 4  # ACTs allowed per tFAW window (full-row activations)
+    # Burst absorption of the tFAW reservation model, in full-row-ACT units.
+    # 4.0 = pure token bucket (a fully idle rank may fire 4 ACTs instantly);
+    # 1.0 = sliding-window-conservative (transient bursts stall immediately,
+    # matching Ramulator's exact window check under FR-FCFS ACT bursts).
+    faw_burst_acts: float = 1.0
+
+    def burst_time(self, beats) -> jnp.ndarray:
+        """Data-bus occupancy for a burst of ``beats`` DDR beats.
+
+        A full cache block is 8 beats == 4 clocks == 5 ns at DDR4-1600.
+        Variable Burst Length (§4.2) shortens this proportionally; zero-beat
+        (fully masked) transfers take 0 bus time but still need the column
+        command slot, handled by the controller model.
+        """
+        return jnp.asarray(beats, jnp.float32) * (self.tCK / 2.0)
+
+    @property
+    def full_burst_time(self) -> float:
+        return 8 * self.tCK / 2.0  # 5 ns
+
+
+DEFAULT_TIMING = DDR4Timing()
+
+
+# --- tFAW power token bucket -------------------------------------------------
+
+def faw_token_rate(t: DDR4Timing) -> float:
+    """Token replenish rate: 4 full-row ACT tokens per tFAW window."""
+    return t.faw_acts / t.tFAW
+
+
+def faw_act_cost(act_array_fraction: jnp.ndarray) -> jnp.ndarray:
+    """Tokens an ACT consumes. A full-row ACT costs 1.0 token; a sectored ACT
+    costs the fraction of full-row *array* activation power it draws
+    (periphery power is delivered separately and does not constrain tFAW,
+    §4.1). ``act_array_fraction`` comes from ``power.act_array_fraction``.
+    """
+    return jnp.asarray(act_array_fraction, jnp.float32)
+
+
+def faw_wait(tokens: jnp.ndarray, now: jnp.ndarray, last_refill: jnp.ndarray,
+             cost: jnp.ndarray, t: DDR4Timing):
+    """Earliest time >= now the bucket affords ``cost`` tokens.
+
+    Returns (act_time, tokens_after, refill_time_after). Bucket capacity is
+    ``faw_acts`` tokens (a burst of 4 full-row ACTs back-to-back is legal).
+    """
+    rate = faw_token_rate(t)
+    avail = jnp.minimum(
+        jnp.float32(t.faw_acts), tokens + (now - last_refill) * rate
+    )
+    deficit = jnp.maximum(cost - avail, 0.0)
+    act_time = now + deficit / rate
+    tokens_after = jnp.minimum(
+        jnp.float32(t.faw_acts), tokens + (act_time - last_refill) * rate
+    ) - cost
+    return act_time, tokens_after, act_time

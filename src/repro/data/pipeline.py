@@ -1,0 +1,62 @@
+"""Deterministic, shardable, checkpointable synthetic LM data pipeline.
+
+Every (step, host_shard) pair maps to tokens purely functionally — counter-
+mode PRNG over (seed, step, shard) — so:
+
+* any host can regenerate any shard (no data server / no coordination),
+* restart-from-checkpoint resumes mid-epoch exactly (state == step counter),
+* elastic re-sharding is trivial: a host that takes over shard j of M just
+  evaluates the same function with its new (j, M).
+
+The token stream is a Zipf-ish mixture with local n-gram structure so the
+LM loss actually decreases (used by examples/train_100m.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+
+
+def _tokens_for(cfg: DataConfig, step: int, shard: int, n_shards: int,
+                rows: int) -> np.ndarray:
+    """Rows of this shard for this step (numpy, host-side)."""
+    rng = np.random.default_rng(
+        (cfg.seed * 1_000_003 + step) * 4096 + shard)
+    # zipf-ish unigram over vocab with short-range repetition structure
+    base = rng.zipf(1.3, size=(rows, cfg.seq_len)).astype(np.int64)
+    toks = (base - 1) % cfg.vocab
+    # inject copy structure: each row repeats a window to give the LM signal
+    w = cfg.seq_len // 4
+    if w > 1:
+        toks[:, 2 * w:3 * w] = toks[:, :w]
+    return toks.astype(np.int32)
+
+
+def batch_for(cfg: DataConfig, state: PipelineState, shard: int = 0,
+              n_shards: int = 1) -> dict:
+    """The (tokens, labels) shard for this step. labels = next token."""
+    rows = cfg.global_batch // n_shards
+    toks = _tokens_for(cfg, state.step, shard, n_shards, rows)
+    labels = np.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+    return dict(tokens=jnp.asarray(toks), labels=jnp.asarray(labels))
+
+
+def advance(state: PipelineState) -> PipelineState:
+    return PipelineState(step=state.step + 1)

@@ -1,0 +1,22 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes in Python for correctness validation); on TPU hardware set
+``interpret=False`` (or rely on the default backend detection below).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.sectored_attention import sectored_attention
+from repro.kernels.vbl_gather import vbl_gather
+
+__all__ = ["flash_attention", "sectored_attention", "vbl_gather",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """interpret=True unless running on a real TPU backend."""
+    return jax.default_backend() != "tpu"

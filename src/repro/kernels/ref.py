@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sectored_attention_ref(q, k_pages, v_pages, page_idx, length):
+    """Decode attention over selected KV sectors.
+
+    q: (B, Hkv, rep, hd) — grouped query heads.
+    k_pages/v_pages: (B, Hkv, P, page, hd).
+    page_idx: (B, Hkv, K) int32 selected sectors.
+    length: (B,) int32 valid tokens (positions 0..length inclusive exist;
+        `length` is the position of the newest token).
+    Returns (B, Hkv, rep, hd) float32.
+    """
+    B, Hkv, P, page, hd = k_pages.shape
+    k_sel = jnp.take_along_axis(
+        k_pages, page_idx[..., None, None], axis=2)  # (B,Hkv,K,page,hd)
+    v_sel = jnp.take_along_axis(v_pages, page_idx[..., None, None], axis=2)
+    scores = jnp.einsum("bgrk,bgcpk->bgrcp", q.astype(jnp.float32),
+                        k_sel.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    tok_pos = page_idx[..., None] * page + jnp.arange(page)
+    valid = tok_pos <= length[:, None, None, None]
+    scores = jnp.where(valid[:, :, None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=(-2, -1), keepdims=True)
+    e = jnp.where(valid[:, :, None, :, :], jnp.exp(scores - m), 0.0)
+    num = jnp.einsum("bgrcp,bgcpk->bgrk", e, v_sel.astype(jnp.float32))
+    den = jnp.maximum(jnp.sum(e, axis=(-2, -1)), 1e-30)
+    return num / den[..., None]
+
+
+def vbl_gather_ref(data, masks):
+    """Variable Burst Length compaction.
+
+    data: (N, 8, W) — 8 sectors per row; masks: (N,) uint32 sector bits.
+    Returns (out (N, 8, W), counts (N,)): enabled sectors packed at the
+    front in sector order (the Read-FIFO skip of §4.2), rest zero.
+    """
+    N, S, W = data.shape
+    bits = ((masks[:, None].astype(jnp.uint32)
+             >> jnp.arange(S, dtype=jnp.uint32)) & 1).astype(bool)
+    dest = jnp.cumsum(bits, axis=1) - 1  # target slot per enabled sector
+    out = jnp.zeros_like(data)
+    rows = jnp.arange(N)[:, None]
+    dest_safe = jnp.where(bits, dest, S - 1)
+    contrib = jnp.where(bits[..., None], data, 0)
+    out = out.at[rows, dest_safe].add(contrib)
+    # rows where a disabled sector aliased slot S-1 added 0, so this is exact
+    return out, jnp.sum(bits, axis=1).astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q,k,v: (B, H, S, hd). Returns (B, H, S, hd) float32."""
+    B, H, S, hd = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: sectored decode attention (the paper's SA+VBL on TPU).
+
+Hardware mapping (DESIGN.md §2): the Sector Predictor's page indices are
+*scalar-prefetched* so they can steer the BlockSpec index_map — the grid
+walks (batch, kv-head, selected-sector) and the DMA engine brings exactly
+one selected KV page HBM->VMEM per step. Pages that are not selected are
+never read from HBM at all: that is Sectored Activation + Variable Burst
+Length — the burst (pipeline of page DMAs) has data-dependent length K
+instead of the full sequence.
+
+VMEM working set per step: one K page + one V page (page x hd, e.g.
+128x128 bf16 = 32 KiB each), the query block (rep x hd), and the running
+softmax accumulators — far under the ~16 MiB VMEM budget, with MXU-aligned
+(128-multiple) matmul dims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pages_ref, length_ref,  # scalar prefetch
+            q_ref, k_ref, v_ref,  # VMEM blocks
+            out_ref,  # VMEM output block
+            m_ref, l_ref, acc_ref,  # scratch
+            *, page_size: int, num_selected: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (rep, hd)
+    k = k_ref[0, 0, 0].astype(jnp.float32)  # (page, hd)
+    v = v_ref[0, 0, 0].astype(jnp.float32)  # (page, hd)
+    hd = q.shape[-1]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s * (1.0 / jnp.sqrt(jnp.float32(hd)))  # (rep, page)
+
+    page_id = pages_ref[b, h, i]
+    tok_pos = page_id * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    valid = tok_pos <= length_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == num_selected - 1)
+    def _finish():
+        out_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sectored_attention(q, k_pages, v_pages, page_idx, length,
+                       interpret: bool = True):
+    """q (B,Hkv,rep,hd); k_pages/v_pages (B,Hkv,P,page,hd);
+    page_idx (B,Hkv,K) int32; length (B,) int32 -> (B,Hkv,rep,hd) f32.
+
+    interpret=True on CPU; on TPU hardware pass interpret=False.
+    """
+    B, Hkv, rep, hd = q.shape
+    _, _, P, page, _ = k_pages.shape
+    K = page_idx.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, K),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, h, i, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, page, hd),
+                         lambda b, h, i, pages, length: (b, h, pages[b, h, i],
+                                                         0, 0)),
+            pl.BlockSpec((1, 1, 1, page, hd),
+                         lambda b, h, i, pages, length: (b, h, pages[b, h, i],
+                                                         0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b, h, i, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, page_size=page,
+                               num_selected=K)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), jnp.float32),
+        interpret=interpret,
+    )(page_idx, length, q, k_pages, v_pages)

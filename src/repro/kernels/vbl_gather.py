@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: Variable Burst Length sector compaction (§4.2).
+
+The DRAM-side VBL replaces the burst counter with an encoder that walks only
+the Read-FIFO entries whose sector bits are set, so the burst carries the
+enabled sectors back-to-back. The TPU analogue compacts the enabled sectors
+of each row to the front of the output tile: downstream consumers then DMA
+only ``count`` sectors (the shortened burst) instead of all 8.
+
+Grid: one program per row block; the row's 8 sectors live in one VMEM tile;
+destination slots come from an exclusive prefix sum over the sector bits
+(the paper's 8->3 encoder).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from repro.core.sectors import NUM_SECTORS
+
+
+def _kernel(mask_ref, data_ref, out_ref, cnt_ref):
+    mask = mask_ref[0]
+    bits = ((mask >> jnp.arange(NUM_SECTORS, dtype=jnp.uint32)) & 1)
+    dest = jnp.cumsum(bits) - 1  # the 8->3 encoder: slot per enabled sector
+    cnt_ref[0] = jnp.sum(bits).astype(jnp.int32)
+
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(s, _):
+        @pl.when(bits[s] == 1)
+        def _copy():
+            row = data_ref[0, s, :]
+            out_ref[0, dest[s], :] = row
+        return _
+    jax.lax.fori_loop(0, NUM_SECTORS, body, None)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def vbl_gather(data, masks, interpret: bool = True):
+    """data (N, 8, W); masks (N,) uint32 -> (packed (N, 8, W), counts (N,))."""
+    N, S, W = data.shape
+    assert S == NUM_SECTORS
+    out_shape = (
+        jax.ShapeDtypeStruct((N, S, W), data.dtype),
+        jax.ShapeDtypeStruct((N,), jnp.int32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, S, W), lambda i: (i, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, S, W), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(masks, data)

@@ -1,0 +1,187 @@
+"""Roofline-term extraction from AOT-compiled artifacts (deliverable g).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` reports *per-device* FLOPs/bytes under SPMD
+(verified empirically: a sharded matmul reports total/chips), so the terms
+below divide by single-chip peaks. Collective bytes are parsed from the
+compiled HLO text: operand bytes of all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute ops.
+
+Hardware constants (TPU v5e-class, per the brief): 197 TFLOP/s bf16,
+819 GB/s HBM, 50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op in an HLO module.
+
+    HLO lines look like ``%name = bf16[256,1024] all-reduce(...)``; the
+    result shape is a faithful proxy for the payload each device moves.
+    Fused/async variants (``all-reduce-start`` etc.) are matched by prefix.
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1].strip()
+        # rhs: "<shape> <op>(...)" — shape may be a tuple "(f32[..], ...)"
+        m = re.match(
+            r"^(\([^)]*\)|[\w\[\],]+(?:\{[\d,:TSE()* ]*\})?)\s+([\w-]+)",
+            rhs)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        for coll in _COLLECTIVES:
+            if op == coll or op.startswith(coll + "-"):
+                out[coll] += _shape_bytes(shape_str)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict[str, int]
+    peak_memory_bytes: int  # per-device (from memory_analysis)
+    model_flops: float  # 6*N*D (dense) / 6*N_active*D (MoE), whole step
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — catches remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable step time (the §Perf score)."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_useful / self.roofline_time if self.roofline_time else 0.0
+
+    def row(self) -> dict:
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh,
+            chips=self.chips,
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            model_flops=self.model_flops,
+            hlo_flops_total=self.flops_per_device * self.chips,
+            useful_fraction=self.useful_flops_fraction,
+            roofline_fraction=self.roofline_fraction,
+            peak_memory_gib=self.peak_memory_bytes / 2**30,
+            coll=self.coll_breakdown,
+        )
+
+
+def model_flops_for(cfg, shape_cfg) -> float:
+    """Analytic useful FLOPs of one step (6ND + attention terms)."""
+    n_active = cfg.active_param_count()
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    if shape_cfg.kind == "train":
+        tokens = B * S
+        flops = 6.0 * n_active * tokens
+        # attention score/value FLOPs (causal): 12 * L * H * hd * S/2 per tok
+        if not cfg.attn_free:
+            n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+            w = cfg.local_window or S
+            eff = min(w, S)
+            flops += 12.0 * n_attn * cfg.n_heads * cfg.head_dim_ * eff / 2 * tokens
+        return flops
+    if shape_cfg.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * n_active * tokens
+        if not cfg.attn_free:
+            n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+            w = cfg.local_window or S
+            flops += 4.0 * n_attn * cfg.n_heads * cfg.head_dim_ * min(w, S) / 2 * tokens
+        return flops
+    # decode: one token per sequence
+    flops = 2.0 * n_active * B
+    if not cfg.attn_free:
+        n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+        w = cfg.local_window or S
+        flops += 4.0 * n_attn * cfg.n_heads * cfg.head_dim_ * min(w, S) * B
+    return flops
+
+
+def analyze(compiled, *, arch, shape, mesh_name, chips, model_flops) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll,
+        peak_memory_bytes=int(peak),
+        model_flops=model_flops,
+    )

@@ -1,0 +1,60 @@
+"""Training launcher: ``python -m repro.launch.train --arch yi-6b ...``
+
+On real hardware this runs under ``jax.distributed`` with the production
+mesh; on this CPU container it runs reduced configs end-to-end (see
+examples/train_100m.py for the canonical driver).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data import pipeline
+from repro.models import model
+from repro.optim import adamw
+from repro.train import loop, step as step_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU)")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = model.init_params(cfg, jax.random.key(0))
+    ocfg = adamw.AdamWConfig(lr=args.lr, compress_grads=args.compress_grads)
+    opt = adamw.init_state(params, ocfg)
+
+    @jax.jit
+    def train_step(p, o, batch):
+        def loss_fn(pp):
+            return model.lm_loss(pp, cfg, batch["tokens"], batch["labels"])
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p2, o2 = adamw.apply_updates(p, grads, o, ocfg)
+        return p2, o2, dict(loss=loss)
+
+    data = pipeline.DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                               global_batch=args.batch)
+    lc = loop.LoopConfig(total_steps=args.steps, checkpoint_every=50,
+                         checkpoint_dir=args.checkpoint_dir)
+    _, _, res = loop.run(train_step, params, opt, data, lc)
+    print(f"arch={cfg.name} steps={res.final_step} "
+          f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"retries={res.retries} restored_from={res.restored_from}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = a_max ** (c * r_t)            (per-channel learned decay base)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+First-order linear recurrences are computed with jax.lax.associative_scan
+(log-depth, TPU-friendly) during training/prefill, and as a single fused
+update during decode (O(1) state — this is what makes the hybrid run the
+long_500k shape natively; only its local-attention layers hold a bounded
+window KV cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+A_MAX_LOG = -8.0  # log of minimum decay => a in (exp(-8), 1)
+RG_WIDTH_FACTOR = 1  # recurrence width == d_model (lightweight variant)
+
+
+def init_rec(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return dict(
+        w_x=jax.random.normal(ks[0], (d, d), dtype) * s,
+        w_gate_r=jax.random.normal(ks[1], (d, d), dtype) * s,
+        w_gate_i=jax.random.normal(ks[2], (d, d), dtype) * s,
+        w_out=jax.random.normal(ks[3], (d, d), dtype) * s,
+        log_a=jnp.full((d,), -0.7, jnp.float32),  # learned decay parameter
+    )
+
+
+def _decay(params, r):
+    """Per-step decay a_t in (0,1): a = exp(softplus(log_a) * -8 * r)."""
+    c = jax.nn.softplus(params["log_a"])
+    return jnp.exp(A_MAX_LOG * c * r)
+
+
+def rglru(params, x, h0):
+    """x: (B,S,D); h0: (B,D) f32. Returns (y (B,S,D), h_last)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xf, params["w_gate_r"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xf, params["w_gate_i"].astype(jnp.float32)))
+    xi = jnp.einsum("bsd,de->bse", xf, params["w_x"].astype(jnp.float32))
+    a = _decay(params, r)  # (B,S,D)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * (i * xi)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b) pairs,
+    # seeded with h0 by folding it into b_0.
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = jnp.einsum("bse,ed->bsd", hh, params["w_out"].astype(jnp.float32))
+    return y.astype(x.dtype), hh[:, -1, :]
+
+
+def rglru_step(params, x, h):
+    """Decode step: x (B,1,D), h (B,D) -> (y (B,1,D), h')."""
+    xf = x[:, 0].astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_gate_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_gate_i"].astype(jnp.float32))
+    xi = xf @ params["w_x"].astype(jnp.float32)
+    a = _decay(params, r)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * (i * xi)
+    y = h_new @ params["w_out"].astype(jnp.float32)
+    return y[:, None, :].astype(x.dtype), h_new
+
+
+def init_rec_state(cfg, batch):
+    return jnp.zeros((batch, cfg.d_model), jnp.float32)

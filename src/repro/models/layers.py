@@ -1,0 +1,113 @@
+"""Shared neural building blocks (pure-function style, pjit-friendly).
+
+Parameters are plain dict pytrees; every function takes (params, inputs) and
+returns outputs, so the whole stack lowers cleanly under jax.jit with
+NamedSharding-annotated inputs on a 512-device mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms(d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+# --- rotary position embeddings ----------------------------------------------
+
+def _rope_angles(positions, dim, base=10000.0):
+    """positions (...,) -> cos/sin of shape (..., dim//2)."""
+    inv = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rot(x, cos, sin):
+    """Rotate pairs in the last dim; cos/sin broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out
+
+
+def apply_rope(x, positions, kind: str = "standard", base=10000.0):
+    """x: (B, S, H, hd); positions: (B, S) int32.
+
+    kind:
+      standard — full-dim rotation (llama-family).
+      rope2d   — ChatGLM 2-D RoPE: rotate only the first half of head_dim.
+      mrope    — Qwen2-VL M-RoPE: head_dim split into 3 sections rotated by
+                 (temporal, height, width) position streams; for the text-only
+                 backbone stub all three streams equal `positions`.
+    """
+    hd = x.shape[-1]
+    if kind == "none":
+        return x
+    if kind == "standard":
+        cos, sin = _rope_angles(positions, hd, base)
+        return _apply_rot(x, cos[..., None, :], sin[..., None, :]).astype(x.dtype)
+    if kind == "rope2d":
+        half = hd // 2
+        cos, sin = _rope_angles(positions, half, base)
+        xr, xp = x[..., :half], x[..., half:]
+        xr = _apply_rot(xr, cos[..., None, :], sin[..., None, :])
+        return jnp.concatenate([xr.astype(x.dtype), xp], axis=-1)
+    if kind == "mrope":
+        # 3 sections (t, h, w); the modality frontend is a stub, so all three
+        # position streams coincide with the 1-D text positions.
+        s1 = hd // 2
+        s2 = hd // 4
+        s3 = hd - s1 - s2
+        outs = []
+        off = 0
+        for sec in (s1, s2, s3):
+            cos, sin = _rope_angles(positions, sec, base)
+            outs.append(_apply_rot(x[..., off:off + sec],
+                                   cos[..., None, :], sin[..., None, :]))
+            off += sec
+        return jnp.concatenate(outs, axis=-1).astype(x.dtype)
+    raise ValueError(kind)
+
+
+# --- MLPs ---------------------------------------------------------------------
+
+def swiglu(params, x):
+    """Gated MLP: silu(x @ w_gate) * (x @ w_up) @ w_down."""
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def init_swiglu(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d ** -0.5
+    return dict(
+        w_gate=jax.random.normal(k1, (d, f), dtype) * s,
+        w_up=jax.random.normal(k2, (d, f), dtype) * s,
+        w_down=jax.random.normal(k3, (f, d), dtype) * (f ** -0.5),
+    )
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x, tied: bool):
+    w = params["embedding"] if tied else params["lm_head"]
+    return jnp.einsum("...d,vd->...v", x, w)
+
+
+def init_embed(key, vocab, d, dtype, tied: bool):
+    k1, k2 = jax.random.split(key)
+    p = dict(embedding=jax.random.normal(k1, (vocab, d), dtype) * 0.02)
+    if not tied:
+        p["lm_head"] = jax.random.normal(k2, (vocab, d), dtype) * 0.02
+    return p

@@ -1,0 +1,125 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+State per head is a (head_dim x head_dim) outer-product accumulator:
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t
+    o_t = (S_{t-1} + diag(u) k_t^T v_t) q_t      (receptance r_t acts as q)
+with w_t = exp(-exp(decay(x_t))) data-dependent per channel (the Finch
+contribution). Training runs a chunked lax.scan over time; decode carries
+S as O(1) recurrent state — which is why rwkv6 runs the long_500k shape
+natively and why the paper's KV-sector technique is inapplicable (no KV
+cache to sector; noted in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def n_heads(cfg):
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_rwkv(key, cfg, dtype):
+    d = cfg.d_model
+    h = n_heads(cfg)
+    hd = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return dict(
+        # time-mix projections (receptance, key, value, gate, output)
+        wr=jax.random.normal(ks[0], (d, d), dtype) * s,
+        wk=jax.random.normal(ks[1], (d, d), dtype) * s,
+        wv=jax.random.normal(ks[2], (d, d), dtype) * s,
+        wg=jax.random.normal(ks[3], (d, d), dtype) * s,
+        wo=jax.random.normal(ks[4], (d, d), dtype) * s,
+        # data-dependent decay (low-rank) + per-channel boost u
+        w_decay=jax.random.normal(ks[5], (d, d), dtype) * s * 0.1,
+        decay_bias=jnp.full((d,), -2.0, jnp.float32),
+        u=jnp.zeros((h, hd), jnp.float32),
+        # token-shift mix coefficients
+        mix=jnp.full((5, d), 0.5, jnp.float32),
+        # channel-mix
+        ck=jax.random.normal(ks[6], (d, cfg.d_ff), dtype) * s,
+        cv=jax.random.normal(ks[7], (cfg.d_ff, d), dtype) * (cfg.d_ff ** -0.5),
+    )
+
+
+def _token_shift(x, prev):
+    """x: (B,S,D); prev: (B,D) last token of the previous chunk."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def time_mix(params, cfg, x, state, prev_x):
+    """x (B,S,D); state (B,H,hd,hd) f32; prev_x (B,D). Returns (out, state', last_x)."""
+    B, S, D = x.shape
+    h, hd = n_heads(cfg), cfg.rwkv_head_dim
+    xs = _token_shift(x, prev_x)
+    mix = params["mix"].astype(x.dtype)
+    xr = x * mix[0] + xs * (1 - mix[0])
+    xk = x * mix[1] + xs * (1 - mix[1])
+    xv = x * mix[2] + xs * (1 - mix[2])
+    xg = x * mix[3] + xs * (1 - mix[3])
+    xw = x * mix[4] + xs * (1 - mix[4])
+
+    r = (xr @ params["wr"]).reshape(B, S, h, hd).astype(jnp.float32)
+    k = (xk @ params["wk"]).reshape(B, S, h, hd).astype(jnp.float32)
+    v = (xv @ params["wv"]).reshape(B, S, h, hd).astype(jnp.float32)
+    g = jax.nn.silu((xg @ params["wg"]).astype(jnp.float32))
+    # data-dependent decay in (0,1): w = exp(-exp(d(x)))
+    dec = (xw @ params["w_decay"]).astype(jnp.float32) + params["decay_bias"]
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, h, hd)
+    u = params["u"]
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,h,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[None, :, :, None] * kv)
+        S_new = w_t[..., None] * S_ + kv
+        return S_new, o
+
+    xs_t = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+            v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, outs = jax.lax.scan(step, state, xs_t)
+    out = outs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    out = (out * g).astype(x.dtype) @ params["wo"]
+    return out, state, x[:, -1, :]
+
+
+def channel_mix(params, cfg, x, prev_x):
+    xs = _token_shift(x, prev_x)
+    mix = params["mix"].astype(x.dtype)
+    xk = x * mix[1] + xs * (1 - mix[1])
+    k = jnp.square(jax.nn.relu((xk @ params["ck"]).astype(jnp.float32)))
+    return (k.astype(x.dtype) @ params["cv"]), x[:, -1, :]
+
+
+def init_state(cfg, batch):
+    h, hd = n_heads(cfg), cfg.rwkv_head_dim
+    return dict(
+        S=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        prev_tmix=jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        prev_cmix=jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+    )
+
+
+def rwkv_block(params, cfg, x, state):
+    """Full RWKV6 block: time-mix + channel-mix with residuals.
+
+    state: dict(S, prev_tmix, prev_cmix). Works for both training (S = seq
+    chunk) and decode (S == 1).
+    """
+    h = layers.rms_norm(x, params["norm1"], cfg.norm_eps)
+    att, S_new, last_t = time_mix(params["tmix"], cfg, h,
+                                  state["S"], state["prev_tmix"].astype(x.dtype))
+    x = x + att
+    h = layers.rms_norm(x, params["norm2"], cfg.norm_eps)
+    ffn, last_c = channel_mix(params["tmix"], cfg, h,
+                              state["prev_cmix"].astype(x.dtype))
+    x = x + ffn
+    new_state = dict(S=S_new, prev_tmix=last_t.astype(jnp.bfloat16),
+                     prev_cmix=last_c.astype(jnp.bfloat16))
+    return x, new_state

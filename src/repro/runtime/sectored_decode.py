@@ -1,0 +1,225 @@
+"""Sectored KV-cache decode — the paper's SA+VBL adapted to TPU serving.
+
+Instead of reading the full KV cache (the 'coarse-grained activation' of a
+decode step), each step:
+
+  1. asks the Sector Predictor for the top-K KV *sectors* (token pages) per
+     (batch, kv-head) — the sector bits;
+  2. gathers only those pages HBM->VMEM — Variable Burst Length: the
+     transfer size is K*page_size tokens, not seq_len;
+  3. attends over the gathered pages (plus the always-fetched recency pages,
+     the LSQ-lookahead analogue);
+  4. feeds the observed per-page attention mass back into the predictor —
+     the SHT update.
+
+Semantics note (DESIGN.md §2): unlike DRAM sector misses, a skipped KV page
+changes the output. This is Quest/H2O-class approximate attention; the
+sector predictor makes the approximation principled, and `exact` mode
+(sector_topk_frac=1.0) degenerates to dense attention for bitwise parity —
+asserted in tests.
+
+The memory-roofline win is K*page/seq_len, reported per cell in
+EXPERIMENTS.md §Perf — the TPU equivalent of the paper's channel-byte
+savings (Fig. 14's RD/WR reduction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import attention, layers, model, moe
+from repro.parallel import sharding
+from repro.runtime import sector_predictor
+
+PAGE_SIZE = 128  # tokens per KV sector (one TPU-friendly tile of KV)
+TOPK_FRAC = 1 / 8  # fraction of pages fetched (8 sectors -> select 1/8..8/8)
+MIN_TOPK = 4
+NEG_INF = -1e30
+
+
+def n_pages(seq_len: int) -> int:
+    return (seq_len + PAGE_SIZE - 1) // PAGE_SIZE
+
+
+def topk_for(seq_len: int, frac: float = TOPK_FRAC) -> int:
+    return max(int(n_pages(seq_len) * frac), MIN_TOPK)
+
+
+@dataclasses.dataclass
+class SectoredState:
+    kv: Any  # stacked attention.KVCache (L, B, Spad, Hkv, hd)
+    table: jax.Array  # (L, B, Hkv, P) sector-history table
+    position: jax.Array  # (B,)
+
+
+jax.tree_util.register_dataclass(SectoredState, ["kv", "table", "position"], [])
+
+
+def init_state(cfg, batch, seq_len, dtype=jnp.bfloat16) -> SectoredState:
+    if cfg.n_layers == 0:  # dry-run probe base
+        return SectoredState(kv=None, table=jnp.zeros((0,), jnp.float32),
+                             position=jnp.zeros((batch,), jnp.int32))
+    # page count padded to a multiple of 8 so the token buffer (pages*128)
+    # divides every mesh-axis product (<= 512 = 4*128)
+    pages = ((n_pages(seq_len + 8) + 7) // 8) * 8
+    pad = pages * PAGE_SIZE
+    cache = attention.init_cache(cfg, batch, pad, dtype)
+    kv = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), cache)
+    table = sector_predictor.init_table(cfg.n_layers, batch, cfg.n_kv_heads,
+                                        pages)
+    return SectoredState(kv=kv, table=table,
+                         position=jnp.zeros((batch,), jnp.int32))
+
+
+def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int):
+    """One-token decode attention over predictor-selected KV sectors.
+
+    x: (B,1,D). Returns (out, new_cache, new_table_l).
+    """
+    B = x.shape[0]
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    rep = cfg.n_heads // hkv
+    pos = cache.length[:, None]
+    q, k_new, v_new = attention.qkv(attn_params, cfg, x, pos)
+
+    # one-hot cache append (see attention.decode_attend: scatter would
+    # replicate the sharded cache under SPMD)
+    slot = jnp.arange(cache.k.shape[1])[None, :, None, None]
+    sel = slot == cache.length[:, None, None, None]
+    k = jnp.where(sel, k_new.astype(cache.k.dtype), cache.k)
+    v = jnp.where(sel, v_new.astype(cache.v.dtype), cache.v)
+
+    share_heads = getattr(cfg, "sector_share_heads", False)
+    if share_heads:
+        # §Perf: one sector set per sequence (summed head scores). The
+        # gather then walks axis 1 of the page-major cache directly — no
+        # head-major transpose copy and no per-head cross-shard exchange.
+        shared = jnp.sum(table_l, axis=1, keepdims=True)  # (B, 1, P)
+        pages1 = sector_predictor.predict_topk(
+            shared, cache.length, PAGE_SIZE, k_pages)  # (B, 1, K)
+        pages = jnp.broadcast_to(pages1, (B, hkv, k_pages))
+        kp = k.reshape(B, -1, PAGE_SIZE, hkv, hd)
+        vp = v.reshape(B, -1, PAGE_SIZE, hkv, hd)
+        k_g = jnp.take_along_axis(
+            kp, pages1[:, 0][..., None, None, None], axis=1
+        )  # (B, K, page, Hkv, hd)
+        v_g = jnp.take_along_axis(
+            vp, pages1[:, 0][..., None, None, None], axis=1)
+        k_sel = k_g.transpose(0, 3, 1, 2, 4)  # (B, Hkv, K, page, hd)
+        v_sel = v_g.transpose(0, 3, 1, 2, 4)
+    else:
+        # 1. sector bits: predictor top-k pages per (B, Hkv)
+        pages = sector_predictor.predict_topk(
+            table_l, cache.length, PAGE_SIZE, k_pages)  # (B, Hkv, K)
+        # 2. VBL gather: only the selected pages move (K*PAGE tokens, not S)
+        kp = k.reshape(B, -1, PAGE_SIZE, hkv, hd)
+        vp = v.reshape(B, -1, PAGE_SIZE, hkv, hd)
+        k_sel = jnp.take_along_axis(
+            kp.transpose(0, 3, 1, 2, 4),  # (B, Hkv, P, page, hd)
+            pages[..., None, None], axis=2
+        )  # (B, Hkv, K, page, hd)
+        v_sel = jnp.take_along_axis(
+            vp.transpose(0, 3, 1, 2, 4), pages[..., None, None], axis=2)
+
+    # 3. attention over the gathered sectors
+    qg = q[:, 0].reshape(B, hkv, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bgrk,bgcpk->bgrcp", qg, k_sel.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    # causal/validity mask on absolute token positions
+    tok_pos = pages[..., None] * PAGE_SIZE + jnp.arange(PAGE_SIZE)  # (B,H,K,p)
+    valid = tok_pos <= cache.length[:, None, None, None]
+    scores = jnp.where(valid[:, :, None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=(-2, -1), keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    e = jnp.where(valid[:, :, None, :, :], e, 0.0)
+    num = jnp.einsum("bgrcp,bgcpk->bgrk", e, v_sel.astype(jnp.float32))
+    den = jnp.sum(e, axis=(-2, -1))[..., None]
+    out = (num / jnp.maximum(den, 1e-30)).astype(x.dtype)
+    out = out.reshape(B, 1, cfg.n_heads, hd)
+    out = jnp.einsum("bqhk,hkd->bqd", out, attn_params["wo"])
+
+    # 4. SHT update: per-page attention mass (summed over q-head group)
+    mass = jnp.sum(e, axis=(2, 4)) / jnp.maximum(
+        jnp.sum(e, axis=(2, 3, 4))[..., None], 1e-30)  # (B, Hkv, K)
+    new_table = sector_predictor.update(table_l, pages, mass)
+
+    new_cache = attention.KVCache(k=k, v=v, length=cache.length + 1)
+    return out, new_cache, new_table
+
+
+def sectored_decode_step(params, cfg, state: SectoredState, token,
+                         k_pages: int):
+    """Full-model one-token decode with sectored attention per layer."""
+    x = layers.embed(params, token)
+    if cfg.n_layers == 0:  # dry-run probe base
+        hidden = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return model.logits_fn(params, cfg, hidden)[:, 0, :], state
+
+    def body(x, scans):
+        lp, cache, table_l = scans
+        h = layers.rms_norm(x, lp["norm1"], cfg.norm_eps)
+        att, cache_new, table_new = sectored_attend(
+            lp["attn"], cfg, h, cache, table_l, k_pages)
+        x = x + att
+        h = layers.rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.moe:
+            x = x + moe.moe_ffn(lp["moe"], cfg, h)
+        else:
+            x = x + layers.swiglu(lp["mlp"], h)
+        return x, (cache_new, table_new)
+
+    x, (kv_new, table_new) = jax.lax.scan(
+        body, x, (params["layers"], state.kv, state.table))
+    hidden = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = model.logits_fn(params, cfg, hidden)[:, 0, :]
+    new = SectoredState(kv=kv_new, table=table_new,
+                        position=state.position + 1)
+    return logits, new
+
+
+def make_sectored_decode_step(cfg, mesh, *, batch: int, seq_len: int,
+                              long_context: bool = False,
+                              topk_frac: float = TOPK_FRAC):
+    """Factory mirroring train.step.make_decode_step for the sectored path."""
+    k_pages = topk_for(seq_len, topk_frac)
+
+    def fn(params, state, token):
+        return sectored_decode_step(params, cfg, state, token, k_pages)
+
+    pspec = sharding.param_shardings(
+        mesh, jax.eval_shape(lambda: model.init_params(cfg, jax.random.key(0))))
+    state_shape = jax.eval_shape(lambda: init_state(cfg, batch, seq_len))
+    dp = sharding.data_axes(mesh)
+
+    def state_spec(path, leaf):
+        name = sharding._last(path)
+        if name in ("k", "v"):
+            if long_context:
+                spec = P(None, None, tuple(dp) + ("model",), None, None)
+            else:
+                spec = P(None, dp, "model", None, None)
+        elif name == "table":
+            spec = P(None, dp if not long_context else None, None, None)
+        elif name == "position":
+            spec = P(dp if not long_context else None)
+        elif name == "length":
+            spec = P(None, dp if not long_context else None)
+        else:
+            spec = P()
+        return NamedSharding(mesh, sharding.fix_spec(spec, leaf.shape, mesh))
+
+    sspec = jax.tree_util.tree_map_with_path(state_spec, state_shape)
+    tok_spec = NamedSharding(mesh, P(dp if not long_context else None, None))
+    return fn, (pspec, sspec, tok_spec), state_shape
+
+
+def bytes_saved_fraction(seq_len: int, topk_frac: float = TOPK_FRAC) -> float:
+    """The paper's headline metric on TPU: fraction of KV bytes NOT moved."""
+    k = topk_for(seq_len, topk_frac)
+    return 1.0 - k / n_pages(seq_len)

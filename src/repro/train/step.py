@@ -1,0 +1,98 @@
+"""Train/serve step factories with full sharding annotations.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) ->
+(params, opt_state, metrics) function with optional microbatched gradient
+accumulation (lax.scan over microbatches keeps per-step HLO small and lets
+XLA overlap each microbatch's backward with the DP reduce of the previous
+one) and remat. ``make_prefill_step`` / ``make_decode_step`` are the serving
+counterparts. All factories also return (in_shardings, out_shardings) so
+launch/dryrun.py can AOT-lower them on the production mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model
+from repro.optim import adamw
+from repro.parallel import sharding
+
+
+def make_train_step(cfg, mesh, *, opt_cfg: adamw.AdamWConfig | None = None,
+                    fsdp: bool = False, remat: bool = True,
+                    microbatch: int = 1):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+
+        def loss_fn(p, tk, lb):
+            return model.lm_loss(p, cfg, tk, lb, remat=remat)
+
+        if microbatch > 1:
+            B = tokens.shape[0]
+            mb = B // microbatch
+            tk = tokens.reshape(microbatch, mb, -1)
+            lb = labels.reshape(microbatch, mb, -1)
+
+            def acc(carry, xs):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, xs[0], xs[1])
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), (tk, lb))
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss / microbatch
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+
+        new_params, new_opt = adamw.apply_updates(params, grads, opt_state,
+                                                  opt_cfg)
+        return new_params, new_opt, dict(loss=loss)
+
+    pspec = sharding.param_shardings(
+        mesh, jax.eval_shape(lambda: model.init_params(cfg, jax.random.key(0))),
+        fsdp=fsdp)
+    ospec = dict(
+        mu=pspec, nu=pspec, step=NamedSharding(mesh, P()),
+    )
+    if opt_cfg.compress_grads:
+        ospec["ef"] = pspec
+    bspec = dict(tokens=sharding.batch_sharding(mesh),
+                 labels=sharding.batch_sharding(mesh))
+    in_shardings = (pspec, ospec, bspec)
+    out_shardings = (pspec, ospec, NamedSharding(mesh, P()))
+    return train_step, in_shardings, out_shardings
+
+
+def make_prefill_step(cfg, mesh, *, long_context: bool = False):
+    def prefill_step(params, tokens):
+        return model.prefill(params, cfg, tokens)
+
+    pspec = sharding.param_shardings(
+        mesh, jax.eval_shape(lambda: model.init_params(cfg, jax.random.key(0))))
+    tspec = sharding.batch_sharding(mesh)
+    return prefill_step, (pspec, tspec)
+
+
+def make_decode_step(cfg, mesh, *, batch: int, seq_len: int,
+                     long_context: bool = False):
+    """serve_step: one new token against a seq_len KV cache."""
+
+    def decode_step(params, state, token):
+        return model.decode_step(params, cfg, state, token)
+
+    pspec = sharding.param_shardings(
+        mesh, jax.eval_shape(lambda: model.init_params(cfg, jax.random.key(0))))
+    state_shape = jax.eval_shape(
+        lambda: model.init_decode_state(cfg, batch, seq_len))
+    sspec = sharding.decode_state_shardings(mesh, state_shape, long_context)
+    dp = sharding.data_axes(mesh)
+    tok_spec = NamedSharding(mesh, P(dp if not long_context else None, None))
+    return decode_step, (pspec, sspec, tok_spec), state_shape

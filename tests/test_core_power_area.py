@@ -1,0 +1,53 @@
+"""Fig. 9 power anchors and Table 4 / §7.5 area anchors."""
+
+import numpy as np
+import pytest
+
+from repro.core import area, power
+
+
+def test_fig9_act_power_anchors():
+    assert float(power.act_array_fraction(1)) == pytest.approx(0.335, abs=0.002)
+    assert float(power.act_array_fraction(8)) == pytest.approx(1.0, abs=1e-6)
+    # overall ACT: -12.7% at 1 sector (plus 0.26% latch overhead)
+    assert float(power.act_power_fraction(1)) == pytest.approx(
+        1 - 0.127 + 0.0026, abs=0.003)
+    assert float(power.act_power_fraction(8)) == pytest.approx(1.0026, abs=1e-4)
+
+
+def test_fig9_rdwr_power_anchors():
+    assert float(power.rd_power_fraction(1)) == pytest.approx(0.300, abs=0.002)
+    assert float(power.wr_power_fraction(1)) == pytest.approx(0.294, abs=0.002)
+    assert float(power.rd_power_fraction(8)) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_power_fractions_monotone():
+    for fn in (power.act_power_fraction, power.rd_power_fraction,
+               power.wr_power_fraction):
+        vals = [float(fn(s)) for s in range(1, 9)]
+        assert all(b > a for a, b in zip(vals, vals[1:]))
+
+
+def test_fig14_rdwr_energy_at_paper_byte_reduction():
+    """At the paper's ~55% byte reduction (mean ~3.6 beats), RD/WR energy
+    should drop ~50% (paper: 51%)."""
+    e = power.DRAMEnergyModel()
+    frac = float(e.rd_energy(3.6) / e.rd_energy(8))
+    assert 0.4 < frac < 0.62
+
+
+def test_tab4_area_anchors():
+    assert area.sectored_dram_bank_overhead() == pytest.approx(0.0226, abs=0.001)
+    assert area.sectored_dram_chip_overhead() == pytest.approx(0.0172, abs=0.001)
+    assert area.halfdram_chip_overhead() == pytest.approx(0.026, abs=0.002)
+    assert area.halfpage_chip_overhead() == pytest.approx(0.052, abs=0.003)
+    assert area.processor_overhead() == pytest.approx(0.0122, abs=0.002)
+    # ordering: SD < HalfDRAM < HalfPage (Table 1/§7.5)
+    assert (area.sectored_dram_chip_overhead()
+            < area.halfdram_chip_overhead()
+            < area.halfpage_chip_overhead())
+
+
+def test_sec82_finer_granularity():
+    assert area.finer_granularity_chip_overhead() == pytest.approx(
+        0.0178, abs=0.001)

@@ -1,0 +1,106 @@
+"""LSQ Lookahead + Sector Predictor behaviour on crafted episode streams."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import lsq, predictor
+from repro.data import traces
+
+
+def crafted_trace(used_mask, dists, pcs=None, E=None):
+    """Build an EpisodeTrace with explicit word usage/distances."""
+    E = E or len(used_mask)
+    used = np.asarray(used_mask, np.uint16)
+    dist = np.asarray(dists, np.int32)
+    first = np.argmax((used[:, None] >> np.arange(8)) & 1, axis=1).astype(np.int32)
+    prof = traces.WORKLOADS["mcf-2006"]
+    return traces.EpisodeTrace(
+        profile=prof, n_instructions=E * 100,
+        pc=np.asarray(pcs if pcs is not None else np.zeros(E), np.int32),
+        first_word=first, used_mask=used,
+        dirty_mask=np.zeros(E, np.uint16), dist=dist,
+        instr_pos=np.arange(1, E + 1, dtype=np.int64) * 100,
+        bank=np.zeros(E, np.int32), row=np.arange(E, dtype=np.int32),
+        block=np.arange(E, dtype=np.int64), dep=np.zeros(E, bool),
+    )
+
+
+def _dist_row(pairs):
+    row = np.full(8, 2 ** 30, np.int32)
+    for off, d in pairs:
+        row[off] = d
+    return row
+
+
+def test_la_covers_words_within_window():
+    """Words within the LSQ window of the initial miss are merged: no
+    sector misses."""
+    tr = crafted_trace(
+        used_mask=[0b00000111] * 4,
+        dists=np.stack([_dist_row([(0, 0), (1, 5), (2, 10)])] * 4),
+    )
+    r = predictor.simulate_prediction(tr, predictor.LA16)
+    assert int(r.n_extra.sum()) == 0
+
+
+def test_la_window_boundary():
+    """A word at distance > window causes exactly one sector miss."""
+    tr = crafted_trace(
+        used_mask=[0b00000011] * 4,
+        dists=np.stack([_dist_row([(0, 0), (1, 100)])] * 4),
+    )
+    r = predictor.simulate_prediction(tr, predictor.LA16)
+    assert int(r.n_extra.sum()) == 4
+    r128 = predictor.simulate_prediction(tr, predictor.LA128)
+    assert int(r128.n_extra.sum()) == 0
+
+
+def test_sp_learns_stable_patterns():
+    """A PC with a stable mask: after the first episode, SP predicts the
+    full mask and sector misses vanish."""
+    E = 50
+    tr = crafted_trace(
+        used_mask=[0b11000001] * E,
+        dists=np.stack([_dist_row([(0, 0), (6, 5000), (7, 6000)])] * E),
+        pcs=np.zeros(E),
+    )
+    basic = predictor.simulate_prediction(tr, predictor.BASIC)
+    sp = predictor.simulate_prediction(tr, predictor.SP512)
+    assert int(basic.n_extra.sum()) == 2 * E  # every far word misses
+    assert int(sp.n_extra[1:].sum()) == 0  # learned after episode 0
+
+
+def test_sp_overfetch_on_changed_pattern():
+    """When the pattern changes, SP overfetches (stale prediction)."""
+    E = 20
+    masks = [0b00000001 if i % 2 else 0b11000001 for i in range(E)]
+    tr = crafted_trace(
+        used_mask=masks,
+        dists=np.stack([_dist_row([(0, 0), (6, 5000), (7, 6000)])
+                        if i % 2 == 0 else _dist_row([(0, 0)])
+                        for i in range(E)]),
+        pcs=np.zeros(E),
+    )
+    sp = predictor.simulate_prediction(tr, predictor.SP512)
+    assert int(sp.overfetch_words.sum()) > 0
+
+
+def test_cluster_requests_groups_by_window():
+    import jax.numpy as jnp
+    used = jnp.uint32(0b00001110)
+    dist = jnp.asarray(_dist_row([(1, 100), (2, 105), (3, 900)]))
+    n, masks, dists = lsq.cluster_requests(used, dist, jnp.uint32(0b1), 64)
+    assert int(n) == 2  # {1,2} cluster + {3}
+    got = {int(m) for m in np.asarray(masks) if int(m)}
+    assert got == {0b0110, 0b1000}
+
+
+def test_fig10_orderings_hold():
+    """Across real profiles: basic > LA16 > LA128 > LA128-SP512 misses."""
+    tr = traces.generate_trace(traces.WORKLOADS["omnetpp-2006"], 4000, seed=7)
+    res = {p.name: predictor.simulate_prediction(tr, p).n_extra.mean()
+           for p in [predictor.BASIC, predictor.LA16, predictor.LA128,
+                     predictor.LA128_SP512]}
+    assert res["basic"] > res["LA16"] > res["LA128"] > res["LA128-SP512"]

@@ -1,0 +1,67 @@
+"""End-to-end system claims (paper directions, calibrated bands)."""
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as sim
+from repro.data import traces
+
+N = 120_000  # instruction budget: enough for stable direction asserts
+
+
+@pytest.fixture(scope="module")
+def high_mix():
+    return tuple(traces.make_mixes("high", n_mixes=1, cores=8, seed=0)[0])
+
+
+def test_sectored_beats_baseline_on_high_mix(high_mix):
+    rb = sim.run_system(high_mix, "baseline", N)
+    rs = sim.run_system(high_mix, "sectored", N)
+    assert rs.mean_ipc > rb.mean_ipc  # paper: +17% weighted speedup
+    assert rs.dram_energy_nj < 0.92 * rb.dram_energy_nj  # paper: -20%
+
+
+def test_sectored_moves_fewer_bytes(high_mix):
+    rb = sim.run_system(high_mix, "baseline", N)
+    rs = sim.run_system(high_mix, "sectored", N)
+    assert rs.sim.bytes_on_bus < 0.6 * rb.sim.bytes_on_bus  # paper: -55%
+
+
+def test_fga_and_dgms_lose(high_mix):
+    rb = sim.run_system(high_mix, "baseline", N)
+    for arch in ("fga", "dgms"):
+        r = sim.run_system(high_mix, arch, N)
+        assert r.mean_ipc < rb.mean_ipc  # Table 1 / §7.4 / §9
+
+
+def test_low_mpki_mixes_roughly_neutral():
+    mix = tuple(traces.make_mixes("low", n_mixes=1, cores=8, seed=0)[0])
+    rb = sim.run_system(mix, "baseline", N)
+    rs = sim.run_system(mix, "sectored", N)
+    assert rs.mean_ipc > 0.9 * rb.mean_ipc  # §8.1: small loss, not collapse
+
+
+def test_basic_mpki_inflation_band():
+    """Fig. 10: basic sectored fetch inflates LLC MPKI ~3x (band 2-5)."""
+    ratios = []
+    for name in ["mcf-2006", "omnetpp-2006", "bzip2-2006", "lbm-2006"]:
+        rb = sim.run_system(name, "baseline", N)
+        rbasic = sim.run_system(name, "sectored-basic", N)
+        ratios.append(rbasic.llc_mpki / rb.llc_mpki)
+    assert 2.0 < float(np.mean(ratios)) < 5.0
+
+
+def test_energy_breakdown_rdwr_dominates_savings(high_mix):
+    """Fig. 14: the RD/WR component shrinks far more than ACT."""
+    rb = sim.run_system(high_mix, "baseline", N)
+    rs = sim.run_system(high_mix, "sectored", N)
+    rdwr_ratio = rs.e_breakdown["rdwr"] / rb.e_breakdown["rdwr"]
+    act_ratio = rs.e_breakdown["act"] / rb.e_breakdown["act"]
+    assert rdwr_ratio < 0.72
+    assert rdwr_ratio < act_ratio
+
+
+def test_writeback_energy_pra_saves_on_writes(high_mix):
+    rb = sim.run_system(high_mix, "baseline", N)
+    rp = sim.run_system(high_mix, "pra", N)
+    assert rp.sim.e_rdwr_nj < rb.sim.e_rdwr_nj  # write-side VBL only

@@ -1,0 +1,110 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,hd", [
+    (1, 1, 128, 64), (2, 2, 256, 64), (1, 4, 256, 128), (2, 1, 512, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, H, S, hd, dtype, causal):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = rand(k1, (B, H, S, hd), dtype)
+    k = rand(k2, (B, H, S, hd), dtype)
+    v = rand(k3, (B, H, S, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 128), (128, 64), (64, 64)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    k1, k2, k3 = jax.random.split(jax.random.key(1), 3)
+    q = rand(k1, (1, 2, 256, 64), jnp.float32)
+    k = rand(k2, (1, 2, 256, 64), jnp.float32)
+    v = rand(k3, (1, 2, 256, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ sectored attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hkv,rep,P,page,hd,K", [
+    (1, 1, 4, 8, 128, 64, 4),
+    (2, 2, 8, 16, 128, 128, 4),
+    (1, 4, 2, 8, 256, 64, 8),
+])
+def test_sectored_attention_matches_ref(B, Hkv, rep, P, page, hd, K, dtype):
+    ks = jax.random.split(jax.random.key(2), 4)
+    q = rand(ks[0], (B, Hkv, rep, hd), dtype)
+    kp = rand(ks[1], (B, Hkv, P, page, hd), dtype)
+    vp = rand(ks[2], (B, Hkv, P, page, hd), dtype)
+    # distinct pages per (b,h), always include page 0 and the newest page
+    idx = jax.vmap(lambda k: jax.random.choice(k, P, (K,), replace=False))(
+        jax.random.split(ks[3], B * Hkv)).reshape(B, Hkv, K).astype(jnp.int32)
+    length = jnp.full((B,), P * page // 2, jnp.int32)
+    out = ops.sectored_attention(q, kp, vp, idx, length, interpret=True)
+    want = ref.sectored_attention_ref(q, kp, vp, idx, length)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_sectored_attention_masks_future_pages():
+    """Pages entirely beyond `length` must contribute nothing."""
+    B, Hkv, rep, P, page, hd, K = 1, 1, 2, 4, 128, 64, 2
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = rand(ks[0], (B, Hkv, rep, hd), jnp.float32)
+    kp = rand(ks[1], (B, Hkv, P, page, hd), jnp.float32)
+    vp = rand(ks[2], (B, Hkv, P, page, hd), jnp.float32)
+    length = jnp.array([page - 1], jnp.int32)  # only page 0 valid
+    idx_a = jnp.array([[[0, 3]]], jnp.int32)  # page 3 is all-future
+    idx_b = jnp.array([[[0, 2]]], jnp.int32)  # page 2 also all-future
+    out_a = ops.sectored_attention(q, kp, vp, idx_a, length, interpret=True)
+    out_b = ops.sectored_attention(q, kp, vp, idx_b, length, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- vbl gather
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("N,W", [(4, 128), (16, 256), (3, 128)])
+def test_vbl_gather_matches_ref(N, W, dtype):
+    key = jax.random.key(4)
+    data = jax.random.normal(key, (N, 8, W), jnp.float32).astype(dtype)
+    if dtype == jnp.int32:
+        data = jax.random.randint(key, (N, 8, W), 0, 100, jnp.int32)
+    masks = jax.random.randint(jax.random.key(5), (N,), 0, 256
+                               ).astype(jnp.uint32)
+    out, cnt = ops.vbl_gather(data, masks, interpret=True)
+    want, wcnt = ref.vbl_gather_ref(data, masks)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(wcnt))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=0, atol=0)
+
+
+def test_vbl_gather_full_and_empty_masks():
+    data = jnp.arange(2 * 8 * 128, dtype=jnp.float32).reshape(2, 8, 128)
+    out, cnt = ops.vbl_gather(data, jnp.array([0xFF, 0x00], jnp.uint32),
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(data[0]))
+    assert int(cnt[0]) == 8 and int(cnt[1]) == 0
+    np.testing.assert_allclose(np.asarray(out[1]), 0.0)

@@ -1,0 +1,144 @@
+"""Serving runtime: sectored decode parity/approximation, predictor
+learning, continuous-batching engine."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.runtime import sector_predictor, sectored_decode
+from repro.serve import engine as engine_mod
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get("yi-6b").reduced(n_layers=2, d_model=64, n_heads=4,
+                                       n_kv_heads=2, d_ff=128, vocab=128,
+                                       head_dim=32)
+    params = model.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _run_sectored(cfg, params, prompt, steps, k_pages):
+    B, S = prompt.shape
+    seq = S + steps + sectored_decode.PAGE_SIZE
+    state = sectored_decode.init_state(cfg, B, seq)
+    # prefill by stepping tokens one by one through the sectored path
+    logits = None
+    for i in range(S):
+        logits, state = sectored_decode.sectored_decode_step(
+            params, cfg, state, prompt[:, i:i + 1], k_pages)
+    toks = []
+    for _ in range(steps):
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        toks.append(int(nxt[0, 0]))
+        logits, state = sectored_decode.sectored_decode_step(
+            params, cfg, state, nxt, k_pages)
+    return toks, state
+
+
+def _run_dense(cfg, params, prompt, steps):
+    B, S = prompt.shape
+    state = model.init_decode_state(cfg, B, S + steps + 8)
+    logits = None
+    for i in range(S):
+        logits, state = model.decode_step(params, cfg, state,
+                                          prompt[:, i:i + 1])
+    toks = []
+    for _ in range(steps):
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        toks.append(int(nxt[0, 0]))
+        logits, state = model.decode_step(params, cfg, state, nxt)
+    return toks
+
+
+def test_exact_mode_matches_dense(setup):
+    """With all pages selected (topk = n_pages), the sectored path is the
+    paper's correctness-neutral mode: greedy decode matches dense."""
+    cfg, params = setup
+    prompt = jax.random.randint(jax.random.key(1), (1, 12), 0, cfg.vocab)
+    steps = 8
+    seq = 12 + steps + sectored_decode.PAGE_SIZE
+    pages = sectored_decode.n_pages(seq + 8)
+    toks_s, _ = _run_sectored(cfg, params, prompt, steps, k_pages=2)
+    # 2 pages == all pages for this short context (<=256 tokens)
+    toks_d = _run_dense(cfg, params, prompt, steps)
+    assert toks_s == toks_d
+
+
+def test_sector_predictor_tracks_mass():
+    """Pages that repeatedly receive attention mass rise in the table and
+    get selected; cold pages don't."""
+    table = sector_predictor.init_table(1, 1, 1, 8)[0]  # (1,1,8)
+    hot = jnp.array([[[2, 5, 6, 7]]], jnp.int32)
+    mass = jnp.array([[[0.7, 0.1, 0.1, 0.1]]], jnp.float32)
+    for _ in range(5):
+        table = sector_predictor.update(table, hot, mass)
+    sel = sector_predictor.predict_topk(
+        table, position=jnp.array([1023]), page_size=128, k=2)
+    assert 2 in np.asarray(sel)  # the hot page
+    assert 7 in np.asarray(sel)  # the recency page (LSQ-lookahead analogue)
+
+
+def test_bytes_saved_fraction():
+    assert sectored_decode.bytes_saved_fraction(32768) == pytest.approx(
+        1 - 1 / 8, abs=0.02)
+    assert sectored_decode.bytes_saved_fraction(524288) > 0.85
+
+
+def test_engine_continuous_batching(setup):
+    cfg, params = setup
+
+    @jax.jit
+    def prefill_fn(tokens):
+        return model.prefill(params, cfg, tokens)
+
+    @jax.jit
+    def decode_fn(state, token):
+        return model.decode_step(params, cfg, state, token)
+
+    eng = engine_mod.Engine(prefill_fn, decode_fn, None,
+                            engine_mod.EngineConfig(max_batch=2))
+    for rid in range(4):
+        prompt = np.arange(5 + rid, dtype=np.int32) % cfg.vocab
+        eng.submit(engine_mod.Request(rid, prompt, max_new_tokens=4))
+    stats = eng.run_until_drained()
+    assert stats["completed"] == 4
+    assert stats["decode_steps"] > 0
+
+
+def test_engine_dynamic_sectored_toggle(setup):
+    """The §8.1 dynamic mechanism: sectored path only at high occupancy."""
+    cfg, params = setup
+    calls = {"sectored": 0, "dense": 0}
+
+    @jax.jit
+    def prefill_fn(tokens):
+        return model.prefill(params, cfg, tokens)
+
+    def decode_fn(state, token):
+        calls["dense"] += 1
+        return model.decode_step(params, cfg, state, token)
+
+    def sectored_fn(state, token):
+        calls["sectored"] += 1
+        return model.decode_step(params, cfg, state, token)
+
+    eng = engine_mod.Engine(prefill_fn, decode_fn, sectored_fn,
+                            engine_mod.EngineConfig(
+                                max_batch=4, sectored_min_occupancy=0.75))
+    # one lonely request -> dense path (low occupancy)
+    eng.submit(engine_mod.Request(0, np.arange(4, dtype=np.int32),
+                                  max_new_tokens=2))
+    eng.run_until_drained()
+    assert calls["sectored"] == 0 and calls["dense"] > 0
+    # full batch -> sectored path
+    for rid in range(4):
+        eng.submit(engine_mod.Request(rid, np.arange(4, dtype=np.int32),
+                                      max_new_tokens=2))
+    eng.run_until_drained()
+    assert calls["sectored"] > 0

@@ -1,0 +1,88 @@
+"""Sharding rules: divisibility repair + roofline HLO parsing."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import roofline
+from repro.parallel import sharding
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    devices = np.zeros((16, 16))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.sampled_from([64, 128, 10, 4, 1, 7, 4096]), min_size=1,
+             max_size=4),
+    st.lists(st.sampled_from([None, "data", "model"]), min_size=0, max_size=4),
+)
+def test_fix_spec_always_divisible(shape, axes):
+    spec = P(*axes)
+    fixed = sharding.fix_spec(spec, tuple(shape), FakeMesh())
+    sizes = {"data": 16, "model": 16}
+    for dim, entry in zip(shape, tuple(fixed) + (None,) * 4):
+        if entry is None:
+            continue
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in entries:
+            prod *= sizes[a]
+        assert dim % prod == 0
+
+
+def test_fix_spec_moves_model_to_contraction_dim():
+    # GQA: kv heads (4) < TP (16) -> model moves to the 4096 input dim
+    fixed = sharding.fix_spec(P(None, "model", None), (4096, 4, 128),
+                              FakeMesh())
+    assert tuple(fixed) == ("model", None, None)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ar = bf16[256,1024] all-reduce(bf16[256,1024] %x), replica_groups={}
+  %ag = f32[16,128]{1,0} all-gather(f32[2,128] %y), dimensions={0}
+  %rs = bf16[8,8] reduce-scatter(bf16[64,8] %z), dimensions={0}
+  %cp = f32[4,4] collective-permute(f32[4,4] %w)
+  %ars = bf16[256,1024] all-reduce-start(bf16[256,1024] %x2)
+  %notacoll = f32[999,999] add(f32[999,999] %a, f32[999,999] %b)
+"""
+    got = roofline.collective_bytes(hlo)
+    assert got["all-reduce"] == 2 * 256 * 1024 * 2  # incl. -start variant
+    assert got["all-gather"] == 16 * 128 * 4
+    assert got["reduce-scatter"] == 8 * 8 * 2
+    assert got["collective-permute"] == 4 * 4 * 4
+    assert got["all-to-all"] == 0
+
+
+def test_param_shardings_cover_all_archs():
+    """Every arch's param pytree gets valid NamedShardings on a 16x16 mesh
+    (shape-level check, no devices needed)."""
+    from repro import configs
+    from repro.models import model
+
+    mesh = FakeMesh()
+    for name in configs.ARCHS:
+        cfg = configs.get(name)
+        shapes = jax.eval_shape(
+            lambda c=cfg: model.init_params(c, jax.random.key(0)))
+
+        def one(path, leaf):
+            spec = sharding.fix_spec(
+                sharding.param_spec(path, leaf, None), leaf.shape, mesh)
+            sizes = {"data": 16, "model": 16}
+            for dim, entry in zip(leaf.shape, tuple(spec)):
+                if entry is None:
+                    continue
+                entries = entry if isinstance(entry, tuple) else (entry,)
+                prod = 1
+                for a in entries:
+                    prod *= sizes[a]
+                assert dim % prod == 0, (name, path, leaf.shape, spec)
+            return spec
+
+        jax.tree_util.tree_map_with_path(one, shapes)

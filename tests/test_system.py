@@ -1,0 +1,38 @@
+"""End-to-end behaviour of the paper's system: simulator pipeline +
+TPU-runtime adaptation working together."""
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as sim
+from repro.core.baselines import ALL_ARCHS
+from repro.runtime import sectored_decode
+
+
+def test_all_paper_archs_run():
+    """Every evaluated DRAM architecture simulates a small workload."""
+    for name in ALL_ARCHS:
+        r = sim.run_system("omnetpp-2006", name, 60_000)
+        assert r.dram_energy_nj > 0
+        assert np.isfinite(r.mean_ipc)
+
+
+def test_sectored_dram_end_to_end_story():
+    """The paper's abstract, in one test: on a memory-intensive workload,
+    Sectored DRAM moves fewer bytes, uses less DRAM energy, and (multicore)
+    improves performance; the TPU adaptation saves the same kind of bytes."""
+    mix = ("ligraPageRank",) * 8
+    rb = sim.run_system(mix, "baseline", 120_000)
+    rs = sim.run_system(mix, "sectored", 120_000)
+    assert rs.sim.bytes_on_bus < rb.sim.bytes_on_bus
+    assert rs.dram_energy_nj < rb.dram_energy_nj
+    assert rs.mean_ipc > rb.mean_ipc
+    # TPU side: the KV-sector fetch saves the same fraction of bytes the
+    # predictor selects away
+    assert sectored_decode.bytes_saved_fraction(32768) > 0.8
+
+
+def test_overfetch_tracked():
+    r = sim.run_system("lbm-2006", "sectored", 60_000)
+    assert r.fetched_words >= r.used_words - r.n_sector_misses
+    assert r.overfetch_words >= 0
