@@ -13,12 +13,15 @@ def sectored_attention_ref(q, k_pages, v_pages, page_idx, length):
 
     q: (B, Hkv, rep, hd) — grouped query heads.
     k_pages/v_pages: (B, Hkv, P, page, hd).
-    page_idx: (B, Hkv, K) int32 selected sectors.
+    page_idx: (B, Hkv, K) int32 selected sectors; a singleton head axis
+        ((B, 1, K)) shares one sector set across all kv heads.
     length: (B,) int32 valid tokens (positions 0..length inclusive exist;
         `length` is the position of the newest token).
     Returns (B, Hkv, rep, hd) float32.
     """
     B, Hkv, P, page, hd = k_pages.shape
+    page_idx = jnp.broadcast_to(page_idx,
+                                (B, Hkv, page_idx.shape[-1]))
     k_sel = jnp.take_along_axis(
         k_pages, page_idx[..., None, None], axis=2)  # (B,Hkv,K,page,hd)
     v_sel = jnp.take_along_axis(v_pages, page_idx[..., None, None], axis=2)

@@ -30,9 +30,9 @@ def _kernel(pages_ref, length_ref,  # scalar prefetch
             q_ref, k_ref, v_ref,  # VMEM blocks
             out_ref,  # VMEM output block
             m_ref, l_ref, acc_ref,  # scratch
-            *, page_size: int, num_selected: int):
+            *, page_size: int, num_selected: int, shared_pages: bool):
     b = pl.program_id(0)
-    h = pl.program_id(1)
+    h = 0 if shared_pages else pl.program_id(1)
     i = pl.program_id(2)
 
     @pl.when(i == 0)
@@ -73,25 +73,36 @@ def _kernel(pages_ref, length_ref,  # scalar prefetch
 def sectored_attention(q, k_pages, v_pages, page_idx, length,
                        interpret: bool = True):
     """q (B,Hkv,rep,hd); k_pages/v_pages (B,Hkv,P,page,hd);
-    page_idx (B,Hkv,K) int32; length (B,) int32 -> (B,Hkv,rep,hd) f32.
+    page_idx (B,Hkv,K) or (B,1,K) int32; length (B,) int32
+    -> (B,Hkv,rep,hd) f32.
+
+    A singleton head axis on ``page_idx`` means one **shared sector set per
+    sequence** (the serving runtime's ``sector_share_heads`` mode, and the
+    layout the shared-prefix demand OR-merge produces): the scalar-prefetched
+    index stream is one per sequence and every kv head walks the same page
+    schedule. Each head's KV slice is distinct data, so a page DMA per
+    (batch, head, step) block still occurs — the win is the Hkv-fold smaller
+    index table and a uniform (more prefetch-friendly) page walk, not fewer
+    copies. Selected pages arrive in ascending order from
+    ``sector_predictor.predict_topk`` (monotone HBM walk).
 
     interpret=True on CPU; on TPU hardware pass interpret=False.
     """
     B, Hkv, rep, hd = q.shape
     _, _, P, page, _ = k_pages.shape
     K = page_idx.shape[-1]
+    shared = page_idx.shape[1] == 1 and Hkv > 1
+
+    def kv_map(b, h, i, pages, length):
+        return (b, h, pages[b, 0 if shared else h, i], 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, K),
         in_specs=[
             pl.BlockSpec((1, 1, rep, hd), lambda b, h, i, *_: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, 1, page, hd),
-                         lambda b, h, i, pages, length: (b, h, pages[b, h, i],
-                                                         0, 0)),
-            pl.BlockSpec((1, 1, 1, page, hd),
-                         lambda b, h, i, pages, length: (b, h, pages[b, h, i],
-                                                         0, 0)),
+            pl.BlockSpec((1, 1, 1, page, hd), kv_map),
+            pl.BlockSpec((1, 1, 1, page, hd), kv_map),
         ],
         out_specs=pl.BlockSpec((1, 1, rep, hd),
                                lambda b, h, i, *_: (b, h, 0, 0)),
@@ -102,7 +113,7 @@ def sectored_attention(q, k_pages, v_pages, page_idx, length,
         ],
     )
     kernel = functools.partial(_kernel, page_size=page,
-                               num_selected=K)
+                               num_selected=K, shared_pages=shared)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

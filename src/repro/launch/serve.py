@@ -1,12 +1,25 @@
-"""Serving launcher: continuous batching with the sectored decode path.
+"""Serving launcher: vectorized continuous batching with the sectored
+decode path.
 
 ``python -m repro.launch.serve --arch yi-6b --reduced --requests 8``
+
+Two engine modes:
+
+* default — dense DecodeState slots; the sectored/dense toggle exercises the
+  §8.1 dynamic mechanism over the same dense step (state migration between
+  paths is trivial).
+* ``--true-sectored`` — slots hold SectoredState; the dense-equivalent path
+  is the bit-exact exact mode (every valid page fetched) and the
+  high-occupancy path is predictor top-k with the shared-prefix
+  sector-demand OR-merge pooling SHT scores across slots before each fetch.
+
+``--engine looped`` swaps in the per-slot reference engine (for comparison;
+``benchmarks/serve_throughput.py`` measures the gap).
 """
 
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import numpy as np
@@ -17,7 +30,23 @@ from repro.runtime import sectored_decode
 from repro.serve import engine as engine_mod
 
 
-def build_engine(cfg, params, max_batch=4, sectored=True):
+def build_engine(cfg, params, max_batch=4, sectored=True, *,
+                 engine_cls=engine_mod.Engine, true_sectored=False,
+                 seq_len=256):
+    if true_sectored and (cfg.attn_free or cfg.layer_pattern):
+        raise ValueError(
+            f"--true-sectored needs uniform attention layers; arch "
+            f"{cfg.name!r} is attention-free or hybrid. Drop the flag to "
+            f"serve it on the dense path.")
+    if true_sectored:
+        prefill_fn, exact_fn, sect_fn, merge_fn = (
+            sectored_decode.make_serving_fns(cfg, params=params,
+                                             seq_len=seq_len))
+        return engine_cls(prefill_fn, exact_fn,
+                          sect_fn if sectored else None,
+                          engine_mod.EngineConfig(max_batch=max_batch),
+                          demand_merge_fn=merge_fn)
+
     @jax.jit
     def prefill_fn(tokens):
         return model.prefill(params, cfg, tokens)
@@ -32,9 +61,8 @@ def build_engine(cfg, params, max_batch=4, sectored=True):
         # technique when occupancy is high (engine handles the toggle);
         # dense-state compatibility keeps slot migration trivial
         sect_fn = decode_fn
-    return engine_mod.Engine(
-        prefill_fn, decode_fn, sect_fn,
-        engine_mod.EngineConfig(max_batch=max_batch))
+    return engine_cls(prefill_fn, decode_fn, sect_fn,
+                      engine_mod.EngineConfig(max_batch=max_batch))
 
 
 def main(argv=None):
@@ -44,22 +72,33 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--engine", choices=["vectorized", "looped"],
+                    default="vectorized")
+    ap.add_argument("--true-sectored", action="store_true",
+                    help="serve on SectoredState (exact/top-k paths + "
+                         "shared-prefix demand merge)")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params = model.init_params(cfg, jax.random.key(0))
-    eng = build_engine(cfg, params, max_batch=args.max_batch)
+    engine_cls = (engine_mod.Engine if args.engine == "vectorized"
+                  else engine_mod.LoopedEngine)
+    eng = build_engine(cfg, params, max_batch=args.max_batch,
+                       engine_cls=engine_cls,
+                       true_sectored=args.true_sectored)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=8 + rid % 5).astype(np.int32)
         eng.submit(engine_mod.Request(rid, prompt,
                                       max_new_tokens=args.max_new_tokens))
     stats = eng.run_until_drained()
-    print(f"arch={cfg.name} completed={stats['completed']} "
-          f"decode_steps={stats['decode_steps']} "
+    print(f"arch={cfg.name} engine={args.engine} "
+          f"completed={stats['completed']} "
+          f"decode_steps={stats['decode_steps']} waves={stats['waves']} "
           f"sectored_steps={stats['sectored_steps']} "
+          f"merged_slots={stats['merged_slots']} "
           f"kv_bytes_saved_at_32k="
           f"{sectored_decode.bytes_saved_fraction(32768):.2f}")
 

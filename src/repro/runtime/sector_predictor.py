@@ -34,7 +34,11 @@ def predict_topk(table_l, position, page_size: int, k: int):
     table_l: (B, Hkv, P) scores for one layer. The pages at/near `position`
     get a recency bonus so the active context window is always fetched —
     the runtime analogue of LSQ Lookahead merging in-flight offsets.
-    Returns (B, Hkv, k) int32 page indices.
+    Returns (B, Hkv, k) int32 page indices in **ascending page order**: the
+    gather walks HBM monotonically (a deterministic DMA schedule), and when
+    the selection covers every valid page (exact mode) the gathered buffer
+    is laid out identically to the dense cache prefix — the layout half of
+    the bit-exactness contract asserted in tests/test_serve.py.
     """
     B, H, P = table_l.shape
     pages = jnp.arange(P)
@@ -48,7 +52,27 @@ def predict_topk(table_l, position, page_size: int, k: int):
     valid = pages[None, :] <= cur_page[:, None]
     scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
     _, idx = jax.lax.top_k(scores, k)
-    return idx.astype(jnp.int32)
+    return jnp.sort(idx, axis=-1).astype(jnp.int32)
+
+
+def pool_demands(table, group_ids):
+    """OR-merge sector demands across a slot axis (LSQ-Lookahead analogue).
+
+    table: (S, ...) sector-history scores with a leading slot axis; group_ids
+    (S,) int — slots sharing a group id serve requests against the same KV
+    pages (shared prompt prefix). Each slot's scores are replaced by the
+    element-wise max over its group, so every member predicts the same
+    sector set and one fetch serves the whole group — the serving analogue
+    of the paper's LSQ Lookahead merging sector demands of in-flight
+    accesses to one DRAM row. Scores are non-negative, so max == bitwise OR
+    on thresholded demand bits.
+    """
+    gids = jnp.asarray(group_ids)
+    n_slots = table.shape[0]
+    # O(S) segment reduction (group ids are leader slot indices < S); the
+    # gather back through gids broadcasts each group max to its members
+    pooled = jax.ops.segment_max(table, gids, num_segments=n_slots)
+    return jnp.maximum(pooled[gids], 0.0)
 
 
 def update(table_l, page_idx, page_mass):

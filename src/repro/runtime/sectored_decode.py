@@ -30,6 +30,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import attention, layers, model, moe
@@ -127,9 +128,14 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int):
         v_sel = jnp.take_along_axis(
             vp.transpose(0, 3, 1, 2, 4), pages[..., None, None], axis=2)
 
-    # 3. attention over the gathered sectors
-    qg = q[:, 0].reshape(B, hkv, rep, hd).astype(jnp.float32)
-    scores = jnp.einsum("bgrk,bgcpk->bgrcp", qg, k_sel.astype(jnp.float32))
+    # 3. attention over the gathered sectors. The arithmetic mirrors
+    # attention.decode_attend operand-for-operand (bf16 operands, f32
+    # accumulation, same mask/softmax formulation): with every valid page
+    # selected (exact mode) the gathered buffer is the dense cache prefix in
+    # ascending-page order, so the logits are bit-exact with the dense path.
+    qg = q[:, 0].reshape(B, hkv, rep, hd)
+    scores = jnp.einsum("bgrk,bgcpk->bgrcp", qg.astype(k_sel.dtype), k_sel,
+                        preferred_element_type=jnp.float32)
     scores = scores / jnp.sqrt(jnp.float32(hd))
     # causal/validity mask on absolute token positions
     tok_pos = pages[..., None] * PAGE_SIZE + jnp.arange(PAGE_SIZE)  # (B,H,K,p)
@@ -138,7 +144,8 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int):
     m = jnp.max(scores, axis=(-2, -1), keepdims=True)
     e = jnp.exp(scores - jax.lax.stop_gradient(m))
     e = jnp.where(valid[:, :, None, :, :], e, 0.0)
-    num = jnp.einsum("bgrcp,bgcpk->bgrk", e, v_sel.astype(jnp.float32))
+    num = jnp.einsum("bgrcp,bgcpk->bgrk", e.astype(v_sel.dtype), v_sel,
+                     preferred_element_type=jnp.float32)
     den = jnp.sum(e, axis=(-2, -1))[..., None]
     out = (num / jnp.maximum(den, 1e-30)).astype(x.dtype)
     out = out.reshape(B, 1, cfg.n_heads, hd)
@@ -217,6 +224,73 @@ def make_sectored_decode_step(cfg, mesh, *, batch: int, seq_len: int,
     sspec = jax.tree_util.tree_map_with_path(state_spec, state_shape)
     tok_spec = NamedSharding(mesh, P(dp if not long_context else None, None))
     return fn, (pspec, sspec, tok_spec), state_shape
+
+
+def or_merge_demands(stacked_state: SectoredState, group_ids) -> SectoredState:
+    """Shared-prefix sector-demand OR-merge over an engine's stacked states.
+
+    ``stacked_state`` is a SectoredState whose leaves carry a leading slot
+    axis (the serving engine's batched pytree); ``group_ids`` (slots,) int
+    marks slots whose requests attend the same KV pages (shared prompt
+    prefix). Their sector-history scores are pooled (element-wise max ==
+    OR on demand bits) before the fetch is issued, so every group member
+    predicts the same sector set and one sectored fetch serves the group —
+    the paper's LSQ Lookahead merging sector demands of in-flight accesses.
+    """
+    if stacked_state.kv is None:  # dry-run probe base: nothing to pool
+        return stacked_state
+    pooled = sector_predictor.pool_demands(stacked_state.table, group_ids)
+    return SectoredState(kv=stacked_state.kv, table=pooled,
+                         position=stacked_state.position)
+
+
+def unique_fetches(pages, group_ids) -> int:
+    """Distinct (group, layer/head, page) sectored fetches a wave issues.
+
+    pages: (slots, Hkv, K) selected page indices per slot; slots in the same
+    group fetch from the same KV pool, so duplicates collapse. The merge
+    test asserts this shrinks when demands are OR-merged first.
+    """
+    pages = np.asarray(pages)
+    gids = np.asarray(group_ids)
+    S, H, K = pages.shape
+    seen = {(int(gids[s]), h, int(pages[s, h, k]))
+            for s in range(S) for h in range(H) for k in range(K)}
+    return len(seen)
+
+
+def make_serving_fns(cfg, *, params, seq_len: int,
+                     topk_frac: float = TOPK_FRAC):
+    """(prefill_fn, exact_fn, sectored_fn, merge_fn) for the serving Engine.
+
+    All three callables drive SectoredState, so slots migrate freely between
+    the dense-equivalent path (exact mode: every valid page selected, logits
+    bit-exact with model.decode_step) and the sectored path (predictor
+    top-k). ``merge_fn`` is the shared-prefix OR-merge over stacked states.
+    """
+    pages = ((n_pages(seq_len + 8) + 7) // 8) * 8
+    k_exact = pages  # every page: the correctness-neutral mode
+    k_top = min(topk_for(seq_len, topk_frac), pages)
+
+    # jitted single-token steps: compiled once per token shape, so prefill
+    # (on the admission critical path) and LoopedEngine-driven decode don't
+    # pay per-op eager dispatch for a full model traversal per token
+    exact_fn = jax.jit(
+        lambda state, token: sectored_decode_step(params, cfg, state, token,
+                                                  k_exact))
+    sectored_fn = jax.jit(
+        lambda state, token: sectored_decode_step(params, cfg, state, token,
+                                                  k_top))
+
+    def prefill_fn(tokens):
+        tokens = jnp.asarray(tokens, jnp.int32)
+        state = init_state(cfg, tokens.shape[0], seq_len)
+        logits = None
+        for i in range(tokens.shape[1]):
+            logits, state = exact_fn(state, tokens[:, i:i + 1])
+        return logits, state
+
+    return prefill_fn, exact_fn, sectored_fn, or_merge_demands
 
 
 def bytes_saved_fraction(seq_len: int, topk_frac: float = TOPK_FRAC) -> float:

@@ -1,0 +1,86 @@
+"""`hypothesis` import shim for property-based tests.
+
+When the real package is installed we re-export it untouched. When it is
+absent (minimal CI images), we fall back to a tiny deterministic stand-in:
+``@given`` replays each test over a small fixed set of examples drawn from
+seeded numpy randomness, and ``@settings`` is a no-op. The fallback covers
+only the strategy surface these tests use (integers, booleans, sampled_from,
+tuples, lists) — it is a smoke-level substitute, not a shrinker.
+"""
+
+from __future__ import annotations
+
+import functools
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    FALLBACK_EXAMPLES = 12
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    def given(*strats):
+        def deco(fn):
+            params = list(inspect.signature(fn).parameters.values())
+            kept = params[:len(params) - len(strats)]
+            drawn_names = [p.name for p in params[len(kept):]]
+
+            @functools.wraps(fn)
+            def wrapper(**fixtures):
+                rng = np.random.default_rng(0)
+                for _ in range(FALLBACK_EXAMPLES):
+                    drawn = {n: s.draw(rng)
+                             for n, s in zip(drawn_names, strats)}
+                    fn(**fixtures, **drawn)
+
+            # pytest must not treat the drawn example parameters as
+            # fixtures, but any *leading* parameters (tmp_path, module
+            # fixtures...) must stay visible so fixture injection keeps
+            # working exactly as it does under real hypothesis
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature(kept)
+            return wrapper
+
+        return deco
+
+    def settings(**_kwargs):
+        return lambda fn: fn

@@ -6,6 +6,9 @@ import pytest
 from repro.core import simulator as sim
 from repro.data import traces
 
+# multi-minute DRAM-system simulations; deselect locally with -m "not slow"
+pytestmark = pytest.mark.slow
+
 N = 120_000  # instruction budget: enough for stable direction asserts
 
 

@@ -68,6 +68,28 @@ def test_sectored_attention_matches_ref(B, Hkv, rep, P, page, hd, K, dtype):
                                rtol=tol, atol=tol)
 
 
+def test_sectored_attention_shared_page_set():
+    """A (B,1,K) page_idx (one sector set per sequence — the share-heads /
+    demand-merge layout) matches explicitly broadcasting it per head."""
+    B, Hkv, rep, P, page, hd, K = 2, 4, 2, 8, 128, 64, 4
+    ks = jax.random.split(jax.random.key(6), 4)
+    q = rand(ks[0], (B, Hkv, rep, hd), jnp.float32)
+    kp = rand(ks[1], (B, Hkv, P, page, hd), jnp.float32)
+    vp = rand(ks[2], (B, Hkv, P, page, hd), jnp.float32)
+    idx1 = jax.vmap(lambda k: jax.random.choice(k, P, (K,), replace=False))(
+        jax.random.split(ks[3], B)).reshape(B, 1, K).astype(jnp.int32)
+    length = jnp.full((B,), P * page // 2, jnp.int32)
+    out = ops.sectored_attention(q, kp, vp, idx1, length, interpret=True)
+    bcast = jnp.broadcast_to(idx1, (B, Hkv, K))
+    want = ops.sectored_attention(q, kp, vp, bcast, length, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ref.sectored_attention_ref(q, kp, vp, idx1, length)),
+        rtol=2e-5, atol=2e-5)
+
+
 def test_sectored_attention_masks_future_pages():
     """Pages entirely beyond `length` must contribute nothing."""
     B, Hkv, rep, P, page, hd, K = 1, 1, 2, 4, 128, 64, 2

@@ -111,6 +111,164 @@ def test_engine_continuous_batching(setup):
     assert stats["decode_steps"] > 0
 
 
+def _dense_fns(cfg, params):
+    @jax.jit
+    def prefill_fn(tokens):
+        return model.prefill(params, cfg, tokens)
+
+    @jax.jit
+    def decode_fn(state, token):
+        return model.decode_step(params, cfg, state, token)
+
+    return prefill_fn, decode_fn
+
+
+def _reqs(cfg, n, max_new_tokens, seed=0, size=6):
+    rng = np.random.default_rng(seed)
+    return [engine_mod.Request(
+        rid, rng.integers(0, cfg.vocab, size=size).astype(np.int32),
+        max_new_tokens=max_new_tokens) for rid in range(n)]
+
+
+def test_engine_batched_matches_looped(setup):
+    """The vectorized wave is a pure reorganization: same tokens, same
+    completion order as the per-slot reference engine."""
+    cfg, params = setup
+    prefill_fn, decode_fn = _dense_fns(cfg, params)
+    results = {}
+    for name, cls in [("vec", engine_mod.Engine),
+                      ("loop", engine_mod.LoopedEngine)]:
+        eng = cls(prefill_fn, decode_fn, decode_fn,
+                  engine_mod.EngineConfig(max_batch=3))
+        reqs = _reqs(cfg, 5, max_new_tokens=4, seed=3)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        results[name] = ([r.generated for r in reqs], eng.completion_order)
+    assert results["vec"][0] == results["loop"][0]
+    assert results["vec"][1] == results["loop"][1]
+
+
+def test_engine_admission_bursty(setup):
+    """Bursty arrivals: the engine fills free slots as waves complete and
+    never exceeds max_batch; everything drains."""
+    cfg, params = setup
+    prefill_fn, decode_fn = _dense_fns(cfg, params)
+    eng = engine_mod.Engine(prefill_fn, decode_fn, None,
+                            engine_mod.EngineConfig(max_batch=2))
+    first = _reqs(cfg, 2, max_new_tokens=5, seed=4)
+    for r in first:
+        eng.submit(r)
+    eng.step()
+    assert eng.occupancy == 1.0
+    # burst of 4 arrives mid-flight: larger than the free capacity
+    burst = _reqs(cfg, 4, max_new_tokens=2, seed=5)
+    for r in burst:
+        r.rid += 10
+        eng.submit(r)
+    eng.step()
+    assert len(eng.queue) == 4  # no slot free yet -> burst waits
+    assert eng.occupancy <= 1.0
+    stats = eng.run_until_drained()
+    assert stats["completed"] == 6
+    assert all(r.done for r in first + burst)
+
+
+def test_engine_hysteresis_no_flap(setup):
+    """Occupancy jitter inside the hysteresis band must not thrash the
+    sectored/dense paths (the §8.1 toggle with a guard band)."""
+    cfg, params = setup
+    prefill_fn, decode_fn = _dense_fns(cfg, params)
+
+    def run(hyst):
+        eng = engine_mod.Engine(
+            prefill_fn, decode_fn, decode_fn,
+            engine_mod.EngineConfig(max_batch=4, sectored_min_occupancy=0.5,
+                                    sectored_hysteresis=hyst))
+        # one short + one long request: occupancy starts at the 0.5
+        # threshold, then drops to 0.25 (inside the band) mid-decode
+        reqs = _reqs(cfg, 2, max_new_tokens=2, seed=6)
+        reqs[1].max_new_tokens = 6
+        for r in reqs:
+            eng.submit(r)
+        path = []
+        while eng.queue or any(x is not None for x in eng.active):
+            eng.step()
+            path.append(eng._sectored_on)
+        return path
+
+    with_hyst = run(0.25)
+    # sectored turns on at occ 0.5 and stays on through the 0.25 dip:
+    # zero path switches after the first wave
+    assert with_hyst[0] is True
+    assert all(p is True for p in with_hyst)
+    without = run(0.0)
+    # the bare threshold flips back to dense as soon as occupancy dips
+    assert without[0] is True and not all(p is True for p in without)
+
+
+def test_shared_prefix_merge_reduces_fetches(setup):
+    """OR-merging sector demands across slots that share KV pages shrinks
+    the number of distinct sectored fetches a wave issues."""
+    L, B, Hkv, P, slots, k = 1, 1, 2, 16, 3, 4
+    rng = np.random.default_rng(7)
+    # distinct hot pages per slot -> unmerged demands diverge
+    tables = np.zeros((slots, L, B, Hkv, P), np.float32)
+    for s in range(slots):
+        hot = rng.choice(P - 1, size=4, replace=False)
+        tables[s, 0, 0, :, hot] = 1.0
+    stacked = jnp.asarray(tables)
+    gids = jnp.zeros((slots,), jnp.int32)  # all share one prompt prefix
+    position = jnp.full((B,), (P - 1) * sectored_decode.PAGE_SIZE, jnp.int32)
+
+    def select(tbl):  # (slots, L, B, Hkv, P) -> (slots, Hkv, k) layer-0 pages
+        return np.stack([
+            np.asarray(sector_predictor.predict_topk(
+                tbl[s, 0], position, sectored_decode.PAGE_SIZE, k))[0]
+            for s in range(tbl.shape[0])])
+
+    unmerged = select(np.asarray(stacked))
+    pooled = sector_predictor.pool_demands(stacked, gids)
+    merged = select(np.asarray(pooled))
+    n_unmerged = sectored_decode.unique_fetches(unmerged, gids)
+    n_merged = sectored_decode.unique_fetches(merged, gids)
+    assert n_merged < n_unmerged
+    assert n_merged == Hkv * k  # every group member fetches the same set
+
+
+def test_engine_merge_counted_in_stats(setup):
+    """Requests sharing a prompt prefix are grouped; the engine pools their
+    demands before each sectored wave and counts the merged slots."""
+    cfg, params = setup
+    pf, exact_fn, sect_fn, merge_fn = sectored_decode.make_serving_fns(
+        cfg, params=params, seq_len=48)
+    eng = engine_mod.Engine(
+        pf, exact_fn, sect_fn,
+        engine_mod.EngineConfig(max_batch=2, sectored_min_occupancy=0.5),
+        demand_merge_fn=merge_fn)
+    shared = np.arange(6, dtype=np.int32) % cfg.vocab
+    for rid in range(2):
+        eng.submit(engine_mod.Request(rid, shared.copy(), max_new_tokens=3))
+    stats = eng.run_until_drained()
+    assert stats["completed"] == 2
+    assert stats["sectored_waves"] > 0
+    assert stats["merged_slots"] > 0
+
+
+def test_engine_drain_max_steps(setup):
+    """run_until_drained raises rather than spinning past max_steps."""
+    cfg, params = setup
+    prefill_fn, decode_fn = _dense_fns(cfg, params)
+    eng = engine_mod.Engine(prefill_fn, decode_fn, None,
+                            engine_mod.EngineConfig(max_batch=2))
+    for r in _reqs(cfg, 1, max_new_tokens=50, seed=8):
+        eng.submit(r)
+    with pytest.raises(RuntimeError, match="did not drain"):
+        eng.run_until_drained(max_steps=3)
+    # and with the budget restored it drains cleanly
+    assert eng.run_until_drained(max_steps=100)["completed"] == 1
+
+
 def test_engine_dynamic_sectored_toggle(setup):
     """The §8.1 dynamic mechanism: sectored path only at high occupancy."""
     cfg, params = setup

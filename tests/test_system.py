@@ -8,6 +8,9 @@ from repro.core import simulator as sim
 from repro.core.baselines import ALL_ARCHS
 from repro.runtime import sectored_decode
 
+# multi-minute DRAM-system simulations; deselect locally with -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def test_all_paper_archs_run():
     """Every evaluated DRAM architecture simulates a small workload."""

@@ -94,8 +94,8 @@ def test_elastic_reshard_roundtrip(tiny, tmp_path):
     cfg, params, opt, step, data = tiny
     ckdir = str(tmp_path / "ck5")
     manager.save(ckdir, 1, dict(params=params, opt=opt))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch import mesh as mesh_mod
+    mesh = mesh_mod.make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda _: jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
         dict(params=params, opt=opt))
