@@ -1,7 +1,11 @@
-"""Serve batched requests through the vectorized sectored engine: one
-jitted decode wave per step, Sector Predictor driving KV fetches, and the
-shared-prefix sector-demand OR-merge pooling demands across requests that
-attend the same KV pages (deliverable b).
+"""Serve batched requests through a ServeSession composed from the three
+serving protocols: a SectoredState DecodeBackend (Sector Predictor driving
+KV fetches + shared-prefix sector-demand OR-merge), the OverlapScheduler
+(prefill double-buffered against the in-flight decode wave), and the
+HysteresisPolicy (§8.1 dynamic Sectored-off toggle).
+
+``submit()`` returns a StreamHandle: tokens are read back via ``poll()`` /
+``tokens()`` instead of the session mutating the request.
 
 Run: PYTHONPATH=src python examples/serve_sectored.py
 """
@@ -12,36 +16,37 @@ import numpy as np
 from repro import configs
 from repro.models import model
 from repro.runtime import sectored_decode
-from repro.serve import engine as engine_mod
+from repro.serve import (HysteresisPolicy, OverlapScheduler, Request,
+                         ServeSession)
 
 cfg = configs.get("yi-6b").reduced(n_layers=2, d_model=128, n_heads=4,
                                    n_kv_heads=2, d_ff=256, vocab=512,
                                    head_dim=32)
 params = model.init_params(cfg, jax.random.key(0))
 
-prefill_fn, exact_fn, sectored_fn, merge_fn = sectored_decode.make_serving_fns(
-    cfg, params=params, seq_len=64)
-eng = engine_mod.Engine(
-    prefill_fn, exact_fn, sectored_fn,
-    engine_mod.EngineConfig(max_batch=4, sectored_min_occupancy=0.5),
-    demand_merge_fn=merge_fn)
+backend = sectored_decode.make_serving_fns(cfg, params=params, seq_len=64)
+sess = ServeSession(backend, max_batch=4, scheduler=OverlapScheduler(),
+                    policy=HysteresisPolicy(min_occupancy=0.5))
 
 rng = np.random.default_rng(0)
 shared_prefix = rng.integers(0, cfg.vocab, size=10).astype(np.int32)
-requests = []
+handles = []
 for rid in range(4):
     # two requests share a prompt (same KV pages -> demands OR-merge),
     # two are distinct
     prompt = (shared_prefix if rid < 2
               else rng.integers(0, cfg.vocab, size=10).astype(np.int32))
-    requests.append(engine_mod.Request(rid, prompt, max_new_tokens=12))
-    eng.submit(requests[-1])
+    handles.append(sess.submit(Request(rid, prompt, max_new_tokens=12)))
 
-stats = eng.run_until_drained()
+# stream request 0 token-by-token (the iterator drives the session, so the
+# other three requests decode in the same waves)
+print("request 0 streaming:", list(handles[0].tokens()))
+stats = sess.run_until_drained()
 print("stats:", stats)
-for r in requests:
-    print(f"request {r.rid}: {r.generated}")
-tbl = np.asarray(eng.batched.table)
+for h in handles:
+    print(f"request {h.rid}: done={h.done} tokens={h.peek()}")
+assert handles[0].peek() == handles[1].peek(), "identical prompts diverged"
+tbl = np.asarray(sess.batched.table)
 print("sector-history table (slot 0, layer 0, head 0):",
       np.round(tbl[0, 0, 0, 0, :6], 3))
 print(f"KV bytes saved at 32k context: "

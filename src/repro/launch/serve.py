@@ -1,9 +1,9 @@
-"""Serving launcher: vectorized continuous batching with the sectored
-decode path.
+"""Serving launcher: ServeSession with pluggable scheduler / policy /
+backend over the sectored decode path.
 
 ``python -m repro.launch.serve --arch yi-6b --reduced --requests 8``
 
-Two engine modes:
+Backend modes:
 
 * default — dense DecodeState slots; the sectored/dense toggle exercises the
   §8.1 dynamic mechanism over the same dense step (state migration between
@@ -13,8 +13,16 @@ Two engine modes:
   high-occupancy path is predictor top-k with the shared-prefix
   sector-demand OR-merge pooling SHT scores across slots before each fetch.
 
-``--engine looped`` swaps in the per-slot reference engine (for comparison;
-``benchmarks/serve_throughput.py`` measures the gap).
+Scheduler modes (``--scheduler``):
+
+* ``fifo`` — blocking head-of-queue admission (legacy behaviour).
+* ``overlap`` — prefill double-buffered against the in-flight decode wave
+  with paged-KV admission (``stats['overlapped_prefills']`` counts prompts
+  prefilled while a wave was in flight).
+
+``--engine looped`` swaps in the per-slot reference wave (for comparison;
+``benchmarks/serve_throughput.py`` measures the gap and writes
+``BENCH_serve.json``).
 """
 
 from __future__ import annotations
@@ -27,25 +35,26 @@ import numpy as np
 from repro import configs
 from repro.models import model
 from repro.runtime import sectored_decode
-from repro.serve import engine as engine_mod
+from repro.serve import (EngineConfig, FifoScheduler, HysteresisPolicy,
+                         OverlapScheduler, Request, ServeSession,
+                         ServingBackend)
+from repro.serve import engine as engine_mod  # noqa: F401  (legacy re-export)
 
 
-def build_engine(cfg, params, max_batch=4, sectored=True, *,
-                 engine_cls=engine_mod.Engine, true_sectored=False,
-                 seq_len=256):
+def build_backend(cfg, params, *, sectored=True, true_sectored=False,
+                  seq_len=256):
+    """The data-path object: SectoredState-backed or dense DecodeState."""
     if true_sectored and (cfg.attn_free or cfg.layer_pattern):
         raise ValueError(
             f"--true-sectored needs uniform attention layers; arch "
             f"{cfg.name!r} is attention-free or hybrid. Drop the flag to "
             f"serve it on the dense path.")
     if true_sectored:
-        prefill_fn, exact_fn, sect_fn, merge_fn = (
-            sectored_decode.make_serving_fns(cfg, params=params,
-                                             seq_len=seq_len))
-        return engine_cls(prefill_fn, exact_fn,
-                          sect_fn if sectored else None,
-                          engine_mod.EngineConfig(max_batch=max_batch),
-                          demand_merge_fn=merge_fn)
+        backend = sectored_decode.make_serving_fns(cfg, params=params,
+                                                   seq_len=seq_len)
+        if not sectored:
+            backend.sectored_fn = None
+        return backend
 
     @jax.jit
     def prefill_fn(tokens):
@@ -58,11 +67,32 @@ def build_engine(cfg, params, max_batch=4, sectored=True, *,
     sect_fn = None
     if sectored and not cfg.attn_free and not cfg.layer_pattern:
         # the sectored path drives the same dense state through the paper's
-        # technique when occupancy is high (engine handles the toggle);
+        # technique when occupancy is high (the policy handles the toggle);
         # dense-state compatibility keeps slot migration trivial
         sect_fn = decode_fn
-    return engine_cls(prefill_fn, decode_fn, sect_fn,
-                      engine_mod.EngineConfig(max_batch=max_batch))
+    return ServingBackend(prefill_fn, decode_fn, sect_fn)
+
+
+def build_session(cfg, params, *, max_batch=4, sectored=True,
+                  scheduler="fifo", vectorized=True, true_sectored=False,
+                  seq_len=256) -> ServeSession:
+    backend = build_backend(cfg, params, sectored=sectored,
+                            true_sectored=true_sectored, seq_len=seq_len)
+    sched = OverlapScheduler() if scheduler == "overlap" else FifoScheduler()
+    return ServeSession(backend, max_batch=max_batch, scheduler=sched,
+                        policy=HysteresisPolicy(), vectorized=vectorized)
+
+
+def build_engine(cfg, params, max_batch=4, sectored=True, *,
+                 engine_cls=engine_mod.Engine, true_sectored=False,
+                 seq_len=256):
+    """Legacy constructor kept for pre-redesign call sites: wires the
+    backend's callables into an ``Engine``/``LoopedEngine`` shim."""
+    backend = build_backend(cfg, params, sectored=sectored,
+                            true_sectored=true_sectored, seq_len=seq_len)
+    return engine_cls(backend.prefill_fn, backend.decode_fn,
+                      backend.sectored_fn, EngineConfig(max_batch=max_batch),
+                      demand_merge_fn=backend.demand_merge_fn)
 
 
 def main(argv=None):
@@ -74,6 +104,10 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--engine", choices=["vectorized", "looped"],
                     default="vectorized")
+    ap.add_argument("--scheduler", choices=["fifo", "overlap"],
+                    default="fifo",
+                    help="fifo: blocking admission; overlap: prefill "
+                         "double-buffered against the in-flight wave")
     ap.add_argument("--true-sectored", action="store_true",
                     help="serve on SectoredState (exact/top-k paths + "
                          "shared-prefix demand merge)")
@@ -83,22 +117,24 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     params = model.init_params(cfg, jax.random.key(0))
-    engine_cls = (engine_mod.Engine if args.engine == "vectorized"
-                  else engine_mod.LoopedEngine)
-    eng = build_engine(cfg, params, max_batch=args.max_batch,
-                       engine_cls=engine_cls,
-                       true_sectored=args.true_sectored)
+    sess = build_session(cfg, params, max_batch=args.max_batch,
+                         scheduler=args.scheduler,
+                         vectorized=args.engine == "vectorized",
+                         true_sectored=args.true_sectored)
     rng = np.random.default_rng(0)
+    handles = []
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=8 + rid % 5).astype(np.int32)
-        eng.submit(engine_mod.Request(rid, prompt,
-                                      max_new_tokens=args.max_new_tokens))
-    stats = eng.run_until_drained()
-    print(f"arch={cfg.name} engine={args.engine} "
+        handles.append(sess.submit(Request(rid, prompt,
+                                           max_new_tokens=args.max_new_tokens)))
+    stats = sess.run_until_drained()
+    assert all(h.done for h in handles)
+    print(f"arch={cfg.name} engine={args.engine} scheduler={args.scheduler} "
           f"completed={stats['completed']} "
           f"decode_steps={stats['decode_steps']} waves={stats['waves']} "
           f"sectored_steps={stats['sectored_steps']} "
           f"merged_slots={stats['merged_slots']} "
+          f"overlapped_prefills={stats['overlapped_prefills']} "
           f"kv_bytes_saved_at_32k="
           f"{sectored_decode.bytes_saved_fraction(32768):.2f}")
 

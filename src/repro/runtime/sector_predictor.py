@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 EMA_DECAY = 0.85  # history weight (deeper history = the paper's §8.1 note)
 RECENCY_BONUS = 1e3  # the newest pages are always "predicted" (LSQ-lookahead
@@ -60,15 +61,29 @@ def pool_demands(table, group_ids):
 
     table: (S, ...) sector-history scores with a leading slot axis; group_ids
     (S,) int — slots sharing a group id serve requests against the same KV
-    pages (shared prompt prefix). Each slot's scores are replaced by the
-    element-wise max over its group, so every member predicts the same
-    sector set and one fetch serves the whole group — the serving analogue
-    of the paper's LSQ Lookahead merging sector demands of in-flight
-    accesses to one DRAM row. Scores are non-negative, so max == bitwise OR
-    on thresholded demand bits.
+    pages (shared prompt prefix). Ids need not be contiguous: any labeling
+    in ``[0, S)`` works (the engine uses leader-slot indices, so e.g. slots
+    {0, 3} grouped and {1, 2} singleton is ``[0, 1, 2, 0]``). Each slot's
+    scores are replaced by the element-wise max over its group, so every
+    member predicts the same sector set and one fetch serves the whole
+    group — the serving analogue of the paper's LSQ Lookahead merging
+    sector demands of in-flight accesses to one DRAM row. Scores are
+    non-negative, so max == bitwise OR on thresholded demand bits.
     """
-    gids = jnp.asarray(group_ids)
     n_slots = table.shape[0]
+    # ids outside [0, n_slots) would be dropped by segment_max and then
+    # CLAMPED by the gather below — silent demand corruption, not an
+    # error — so reject them eagerly while the ids are still concrete.
+    # Callers on the per-wave hot path pass host (numpy) ids so this check
+    # never forces a device sync in front of a wave dispatch.
+    if not isinstance(group_ids, jax.core.Tracer):
+        ids = np.asarray(group_ids)
+        if ids.size:
+            lo, hi = int(ids.min()), int(ids.max())
+            if lo < 0 or hi >= n_slots:
+                raise ValueError(f"group_ids must lie in [0, {n_slots}); "
+                                 f"got range [{lo}, {hi}]")
+    gids = jnp.asarray(group_ids)
     # O(S) segment reduction (group ids are leader slot indices < S); the
     # gather back through gids broadcasts each group max to its members
     pooled = jax.ops.segment_max(table, gids, num_segments=n_slots)

@@ -36,6 +36,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import attention, layers, model, moe
 from repro.parallel import sharding
 from repro.runtime import sector_predictor
+from repro.serve.backend import ServingBackend
 
 PAGE_SIZE = 128  # tokens per KV sector (one TPU-friendly tile of KV)
 TOPK_FRAC = 1 / 8  # fraction of pages fetched (8 sectors -> select 1/8..8/8)
@@ -259,38 +260,68 @@ def unique_fetches(pages, group_ids) -> int:
     return len(seen)
 
 
-def make_serving_fns(cfg, *, params, seq_len: int,
-                     topk_frac: float = TOPK_FRAC):
-    """(prefill_fn, exact_fn, sectored_fn, merge_fn) for the serving Engine.
+class SectoredKVBackend(ServingBackend):
+    """DecodeBackend over SectoredState with per-fraction specialization.
 
-    All three callables drive SectoredState, so slots migrate freely between
-    the dense-equivalent path (exact mode: every valid page selected, logits
+    All paths drive SectoredState, so slots migrate freely between the
+    dense-equivalent path (exact mode: every valid page selected, logits
     bit-exact with model.decode_step) and the sectored path (predictor
-    top-k). ``merge_fn`` is the shared-prefix OR-merge over stacked states.
+    top-k). A :class:`~repro.serve.policy.PathDecision` carrying a
+    ``topk_frac`` hint gets a sectored step jitted for exactly that page
+    budget (cached per distinct k), so a SectorPolicy can widen or narrow
+    the fetch without rebuilding the backend.
     """
-    pages = ((n_pages(seq_len + 8) + 7) // 8) * 8
-    k_exact = pages  # every page: the correctness-neutral mode
-    k_top = min(topk_for(seq_len, topk_frac), pages)
 
-    # jitted single-token steps: compiled once per token shape, so prefill
-    # (on the admission critical path) and LoopedEngine-driven decode don't
-    # pay per-op eager dispatch for a full model traversal per token
-    exact_fn = jax.jit(
-        lambda state, token: sectored_decode_step(params, cfg, state, token,
-                                                  k_exact))
-    sectored_fn = jax.jit(
-        lambda state, token: sectored_decode_step(params, cfg, state, token,
-                                                  k_top))
+    def __init__(self, cfg, params, *, seq_len: int,
+                 topk_frac: float = TOPK_FRAC):
+        self.cfg = cfg
+        self.params = params
+        self.seq_len = seq_len
+        self.topk_frac = topk_frac
+        self.pages = ((n_pages(seq_len + 8) + 7) // 8) * 8
+        self._k_cache: dict[int, Any] = {}
+        k_top = min(topk_for(seq_len, topk_frac), self.pages)
+        # jitted single-token steps: compiled once per token shape, so
+        # prefill (on the admission critical path) and looped-wave decode
+        # don't pay per-op eager dispatch for a full model traversal
+        exact_fn = self._step_for(self.pages)  # every page: exact mode
+        super().__init__(self._prefill, exact_fn, self._step_for(k_top),
+                         or_merge_demands)
 
-    def prefill_fn(tokens):
+    def _step_for(self, k_pages: int):
+        fn = self._k_cache.get(k_pages)
+        if fn is None:
+            cfg, params = self.cfg, self.params
+            fn = jax.jit(lambda state, token: sectored_decode_step(
+                params, cfg, state, token, k_pages))
+            self._k_cache[k_pages] = fn
+        return fn
+
+    def sectored_fn_for(self, topk_frac: float | None):
+        if topk_frac is None:
+            return self.sectored_fn
+        return self._step_for(
+            min(topk_for(self.seq_len, topk_frac), self.pages))
+
+    def _prefill(self, tokens):
         tokens = jnp.asarray(tokens, jnp.int32)
-        state = init_state(cfg, tokens.shape[0], seq_len)
+        state = init_state(self.cfg, tokens.shape[0], self.seq_len)
         logits = None
         for i in range(tokens.shape[1]):
-            logits, state = exact_fn(state, tokens[:, i:i + 1])
+            logits, state = self.decode_fn(state, tokens[:, i:i + 1])
         return logits, state
 
-    return prefill_fn, exact_fn, sectored_fn, or_merge_demands
+
+def make_serving_fns(cfg, *, params, seq_len: int,
+                     topk_frac: float = TOPK_FRAC) -> SectoredKVBackend:
+    """Build the SectoredState serving backend.
+
+    Returns a :class:`SectoredKVBackend`; it still unpacks as the legacy
+    ``(prefill_fn, exact_fn, sectored_fn, merge_fn)`` 4-tuple for
+    pre-redesign call sites.
+    """
+    return SectoredKVBackend(cfg, params, seq_len=seq_len,
+                             topk_frac=topk_frac)
 
 
 def bytes_saved_fraction(seq_len: int, topk_frac: float = TOPK_FRAC) -> float:

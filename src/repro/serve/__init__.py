@@ -1,0 +1,44 @@
+"""Sector-aware LLM serving stack — the paper's §8.1 system integration
+as a policy/mechanism split.
+
+The package mirrors the paper's separation of concerns in the memory
+controller:
+
+* :mod:`repro.serve.backend` — **DecodeBackend**: *how the chip executes*.
+  Prefill, dense decode, sectored decode, and the shared-prefix demand
+  merge bundled into one swappable data-path object.
+* :mod:`repro.serve.scheduler` — **Scheduler**: *when accesses issue*.
+  Slot admission and wave composition: ``FifoScheduler`` (blocking
+  head-of-queue admission) and ``OverlapScheduler`` (prefill double-
+  buffered against the in-flight decode wave, paged-KV admission).
+* :mod:`repro.serve.policy` — **SectorPolicy**: *what the controller
+  fetches*. The dynamic Sectored-off threshold, hysteresis band, and
+  top-k page fraction behind one ``decide() -> PathDecision`` call.
+* :mod:`repro.serve.session` — **ServeSession**: the facade composing the
+  three. ``submit()`` returns a ``StreamHandle`` (``poll()`` /
+  ``tokens()``) rather than mutating the request.
+* :mod:`repro.serve.engine` — legacy ``Engine`` / ``LoopedEngine`` shims
+  over ``ServeSession`` for pre-redesign call sites.
+
+See ``docs/serving.md`` for the full protocol reference and the mapping
+back to paper §8.1.
+"""
+
+from repro.serve.backend import DecodeBackend, ServingBackend
+from repro.serve.engine import Engine, EngineConfig, LoopedEngine
+from repro.serve.policy import (AlwaysDense, AlwaysSectored, HysteresisPolicy,
+                                PathDecision, SectorPolicy)
+from repro.serve.scheduler import FifoScheduler, OverlapScheduler, Scheduler
+from repro.serve.session import (PrefillGroup, Request, ServeSession,
+                                 StreamHandle, make_session, state_signature,
+                                 stacked_row_signature)
+
+__all__ = [
+    "DecodeBackend", "ServingBackend",
+    "Engine", "EngineConfig", "LoopedEngine",
+    "AlwaysDense", "AlwaysSectored", "HysteresisPolicy", "PathDecision",
+    "SectorPolicy",
+    "FifoScheduler", "OverlapScheduler", "Scheduler",
+    "PrefillGroup", "Request", "ServeSession", "StreamHandle",
+    "make_session", "state_signature", "stacked_row_signature",
+]

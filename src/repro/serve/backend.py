@@ -1,0 +1,86 @@
+"""DecodeBackend: *how the chip executes* — the data path of the serving
+stack (paper §8.1's execution layer).
+
+A backend bundles the four callables the old ``Engine`` constructor took
+loose (``prefill_fn`` / ``decode_fn`` / ``sectored_decode_fn`` /
+``demand_merge_fn``) into one object, so schedulers and policies can be
+swapped without re-wiring the data path. ``ServingBackend`` is the plain
+container; ``runtime.sectored_decode.make_serving_fns`` builds the
+SectoredState-backed subclass that can also re-specialize its sectored
+step for a policy-requested top-k fraction.
+
+This module is deliberately leaf-level: it imports nothing from
+``repro.runtime`` (the runtime imports *us* to construct backends).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class DecodeBackend(Protocol):
+    """The data path: prefill, dense decode, sectored decode, demand merge.
+
+    ``decode_fn`` / ``sectored_fn`` take ``(state, token)`` with ``token``
+    shaped ``(B, 1)`` and return ``(logits, new_state)``; ``prefill_fn``
+    takes ``(B, S)`` prompt tokens and returns ``(logits, state)``. States
+    are arbitrary pytrees — the session stacks them along a fresh leading
+    slot axis without knowing their internal layout.
+    """
+
+    prefill_fn: Callable
+    decode_fn: Callable
+    sectored_fn: Callable | None
+    demand_merge_fn: Callable | None
+
+    @property
+    def supports_sectored(self) -> bool: ...
+
+    def sectored_fn_for(self, topk_frac: float | None) -> Callable: ...
+
+    def merge_demands(self, stacked_state: Any, group_ids: Any) -> Any: ...
+
+
+class ServingBackend:
+    """Concrete DecodeBackend over four loose callables.
+
+    Iterable as the legacy ``(prefill_fn, decode_fn, sectored_fn,
+    demand_merge_fn)`` 4-tuple so pre-redesign call sites keep working.
+    """
+
+    def __init__(self, prefill_fn: Callable, decode_fn: Callable,
+                 sectored_fn: Callable | None = None,
+                 demand_merge_fn: Callable | None = None):
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.sectored_fn = sectored_fn
+        self.demand_merge_fn = demand_merge_fn
+
+    @property
+    def supports_sectored(self) -> bool:
+        return self.sectored_fn is not None
+
+    def sectored_fn_for(self, topk_frac: float | None) -> Callable:
+        """The sectored step honoring a policy-requested top-k fraction.
+
+        The base backend has one fixed sectored callable and ignores the
+        hint; backends that compile per-k variants (see
+        ``runtime.sectored_decode.SectoredKVBackend``) override this.
+        """
+        if self.sectored_fn is None:
+            raise ValueError("backend has no sectored decode path")
+        return self.sectored_fn
+
+    def merge_demands(self, stacked_state: Any, group_ids: Any) -> Any:
+        if self.demand_merge_fn is None:
+            return stacked_state
+        return self.demand_merge_fn(stacked_state, group_ids)
+
+    def __iter__(self) -> Iterator[Callable | None]:
+        return iter((self.prefill_fn, self.decode_fn, self.sectored_fn,
+                     self.demand_merge_fn))
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}(sectored={self.supports_sectored}, "
+                f"merge={self.demand_merge_fn is not None})")

@@ -1,32 +1,15 @@
-"""Vectorized continuous-batching serving engine with sector-aware scheduling.
+"""Legacy engine facade — thin compatibility shims over ``ServeSession``.
 
-The scheduler mirrors the paper's system integration (§8.1):
+``Engine`` (vectorized) and ``LoopedEngine`` (per-slot reference) predate
+the ServeSession redesign; they are kept so the pre-redesign call sites
+and the vectorized-vs-looped equivalence oracle keep working unchanged.
+Each shim builds a :class:`~repro.serve.backend.ServingBackend` from the
+four loose callables, a :class:`~repro.serve.policy.HysteresisPolicy` from
+``EngineConfig``, and drives a FIFO-scheduled session with the legacy
+in-place contract (``Request.generated`` mutated, ``Request.done`` set).
 
-* **One decode wave per step**: per-slot decode states are stacked into a
-  single batched pytree (a fresh leading *slot* axis on every leaf, so no
-  knowledge of each state's internal batch layout is needed) and every
-  ``step()`` issues ONE jitted+vmapped decode call over the whole batch —
-  the memory controller issuing one merged access instead of ``max_batch``
-  sequential ones. An inactive-slot mask gates token emission: completed
-  slots ride along in the fixed-shape wave but produce nothing and their
-  stale state is overwritten on the next admission.
-* **LSQ-Lookahead analogue (sector-demand OR-merge)**: requests queued
-  against the same KV pages (shared prompt prefixes) have their sector
-  demands OR-merged before the fetch is issued — the engine groups active
-  slots by prefix key and pools their sector-history scores (via
-  ``demand_merge_fn``) so one sectored fetch serves the whole group.
-* **Dynamic Sectored-off with hysteresis (§8.1)**: the engine tracks decode
-  batch occupancy; below a threshold (latency-bound regime, where sector
-  misses aren't paid back) it uses the dense decode path, above it the
-  sectored path. The toggle carries a hysteresis band: once sectored is on
-  it stays on until occupancy falls ``sectored_hysteresis`` *below* the
-  threshold, so occupancy jitter around the threshold cannot thrash paths.
-
-``Engine`` is the vectorized production path; ``LoopedEngine`` keeps the
-old one-slot-at-a-time reference implementation for equivalence tests and
-the throughput benchmark (``benchmarks/serve_throughput.py``). Both are
-synchronous (one decode wave per ``step()``); asynchronous multi-wave
-serving is an orchestration concern above this layer (ROADMAP open item).
+New code should construct :class:`~repro.serve.session.ServeSession`
+directly — see ``docs/serving.md``.
 """
 
 from __future__ import annotations
@@ -34,25 +17,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.serve.backend import ServingBackend
+from repro.serve.policy import HysteresisPolicy
+from repro.serve.scheduler import FifoScheduler
+from repro.serve.session import PREFIX_KEY_TOKENS, Request, ServeSession
 
-PREFIX_KEY_TOKENS = 128  # tokens hashed into the shared-prefix group key
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int
-    generated: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-    @property
-    def prefix_key(self) -> bytes:
-        """Requests with equal keys hit the same leading KV pages."""
-        return np.asarray(self.prompt[:PREFIX_KEY_TOKENS], np.int32).tobytes()
+__all__ = ["PREFIX_KEY_TOKENS", "Request", "EngineConfig", "Engine",
+           "LoopedEngine"]
 
 
 @dataclasses.dataclass
@@ -63,219 +34,93 @@ class EngineConfig:
 
 
 class _EngineBase:
-    """Shared request-queue / slot bookkeeping; subclasses run the wave."""
+    """Shared shim plumbing; subclasses pick the wave flavor."""
+
+    _vectorized: bool
 
     def __init__(self, prefill_fn: Callable, decode_fn: Callable,
-                 sectored_decode_fn: Callable | None,
-                 cfg: EngineConfig = EngineConfig(),
+                 sectored_decode_fn: Callable | None = None,
+                 cfg: EngineConfig | None = None,
                  demand_merge_fn: Callable | None = None):
-        self.prefill = prefill_fn
-        self.decode = decode_fn
-        self.sectored_decode = sectored_decode_fn
-        self.demand_merge = demand_merge_fn
-        self.cfg = cfg
-        self.queue: list[Request] = []
-        self.active: list[Request | None] = [None] * cfg.max_batch
-        self.completion_order: list[int] = []
-        self._sectored_on = False
-        self.stats = dict(decode_steps=0, sectored_steps=0, completed=0,
-                          waves=0, sectored_waves=0, merged_slots=0)
+        # cfg default is None (not a shared EngineConfig() instance): a
+        # dataclass default in the signature would be constructed once and
+        # aliased by every engine built without an explicit config
+        self.cfg = cfg if cfg is not None else EngineConfig()
+        backend = ServingBackend(prefill_fn, decode_fn, sectored_decode_fn,
+                                 demand_merge_fn)
+        self.session = ServeSession(
+            backend, max_batch=self.cfg.max_batch, scheduler=FifoScheduler(),
+            policy=HysteresisPolicy(
+                min_occupancy=self.cfg.sectored_min_occupancy,
+                hysteresis=self.cfg.sectored_hysteresis),
+            vectorized=self._vectorized)
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # legacy surface, delegated to the session -----------------------------
+
+    def submit(self, req: Request) -> None:
+        self.session.submit(req, bind_request=True)
+
+    def step(self) -> int:
+        return self.session.step()
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        return self.session.run_until_drained(max_steps=max_steps)
+
+    @property
+    def queue(self) -> list[Request]:
+        return [h.request for h in self.session.queue]
+
+    @property
+    def active(self) -> list[Request | None]:
+        return [h.request if h is not None else None
+                for h in self.session.slots]
 
     @property
     def occupancy(self) -> float:
-        return sum(r is not None for r in self.active) / self.cfg.max_batch
+        return self.session.occupancy
 
-    def _admit(self):
-        for slot in range(self.cfg.max_batch):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                logits, state = self.prefill(req.prompt[None, :])
-                tok = int(np.argmax(np.asarray(logits[0])))
-                req.generated.append(tok)
-                self.active[slot] = req
-                self._install(slot, state)
+    @property
+    def completion_order(self) -> list[int]:
+        return self.session.completion_order
 
-    def _install(self, slot: int, state):
-        raise NotImplementedError
+    @property
+    def stats(self) -> dict[str, int]:
+        return self.session.stats
+
+    @stats.setter
+    def stats(self, value: dict[str, int]) -> None:
+        self.session.stats = value
+
+    @property
+    def _sectored_on(self) -> bool:
+        return getattr(self.session.policy, "_on", False)
 
     def _select_path(self) -> bool:
-        """Dynamic sectored-on/off with hysteresis: switch on at the
-        threshold, switch off only below (threshold - hysteresis)."""
-        if self.sectored_decode is None:
+        """Legacy hook: one policy decision against current occupancy."""
+        if not self.session.backend.supports_sectored:
             return False
-        occ = self.occupancy
-        if self._sectored_on:
-            if occ < self.cfg.sectored_min_occupancy - self.cfg.sectored_hysteresis:
-                self._sectored_on = False
-        elif occ >= self.cfg.sectored_min_occupancy:
-            self._sectored_on = True
-        return self._sectored_on
-
-    def _group_ids(self) -> np.ndarray:
-        """(max_batch,) int32: slots whose requests share a prompt prefix
-        get the same id (the leader slot's index); free slots get their own."""
-        gids = np.arange(self.cfg.max_batch, dtype=np.int32)
-        leaders: dict[bytes, int] = {}
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            gids[slot] = leaders.setdefault(req.prefix_key, slot)
-        return gids
-
-    def _merge_groups(self, active_slots) -> np.ndarray:
-        """Group ids for a sectored wave + the merged_slots accounting,
-        shared by both engines so their merge behaviour cannot diverge."""
-        gids = self._group_ids()
-        n_groups = len({int(gids[s]) for s in active_slots})
-        self.stats["merged_slots"] += len(active_slots) - n_groups
-        return gids
-
-    def _finish(self, slot: int, req: Request):
-        req.done = True
-        self.active[slot] = None
-        self.completion_order.append(req.rid)
-        self.stats["completed"] += 1
-
-    def run_until_drained(self, max_steps: int = 10_000):
-        steps = 0
-        while (self.queue or any(r is not None for r in self.active)):
-            self.step()
-            steps += 1
-            if steps > max_steps:
-                raise RuntimeError("engine did not drain")
-        return self.stats
-
-    def step(self) -> int:
-        raise NotImplementedError
+        return self.session.policy.decide(self.session.occupancy,
+                                          self.session.stats).use_sectored
 
 
 class Engine(_EngineBase):
-    """Vectorized engine: ONE jitted decode call per step over all slots.
+    """Vectorized shim: ONE jit(vmap) decode wave per step (see
+    ``ServeSession`` with ``vectorized=True``)."""
 
-    Per-slot states (as returned by ``prefill_fn``, any pytree) are stacked
-    along a new leading slot axis; the decode wave is ``jit(vmap(fn))`` over
-    that axis. Slot admission is a ``.at[slot].set`` scatter, completion
-    just frees the slot (the stale state is masked out and overwritten by
-    the next admission). All admitted prompts must produce identically
-    shaped states (the KV buffer padding in ``model.init_decode_state`` /
-    ``sectored_decode.init_state`` guarantees this for prompts up to the
-    padding quantum).
-    """
+    _vectorized = True
 
-    def __init__(self, prefill_fn, decode_fn, sectored_decode_fn=None,
-                 cfg: EngineConfig = EngineConfig(),
-                 demand_merge_fn: Callable | None = None):
-        super().__init__(prefill_fn, decode_fn, sectored_decode_fn, cfg,
-                         demand_merge_fn)
-        self.batched = None  # stacked per-slot states, leading slot axis
-        self._dense_wave = jax.jit(jax.vmap(decode_fn))
-        self._sect_wave = (jax.jit(jax.vmap(sectored_decode_fn))
-                           if sectored_decode_fn is not None else None)
-
-    def _install(self, slot: int, state):
-        if self.batched is None:
-            self.batched = jax.tree.map(
-                lambda x: jnp.zeros((self.cfg.max_batch,) + x.shape, x.dtype),
-                state)
-        self.batched = jax.tree.map(
-            lambda big, small: big.at[slot].set(small), self.batched, state)
-
-    def step(self) -> int:
-        """Admit + one vectorized decode wave. Returns tokens produced."""
-        self._admit()
-        active_slots = [s for s, r in enumerate(self.active) if r is not None]
-        if not active_slots:
-            return 0
-        use_sectored = self._select_path()
-
-        if use_sectored and self.demand_merge is not None:
-            gids = self._merge_groups(active_slots)
-            self.batched = self.demand_merge(self.batched, jnp.asarray(gids))
-
-        # one decode wave over every slot; inactive slots are masked below
-        tokens = np.zeros((self.cfg.max_batch, 1, 1), np.int32)
-        for s in active_slots:
-            tokens[s, 0, 0] = self.active[s].generated[-1]
-        wave = self._sect_wave if use_sectored else self._dense_wave
-        logits, self.batched = wave(self.batched, jnp.asarray(tokens))
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(
-            self.cfg.max_batch, -1)[:, 0]
-
-        produced = 0
-        self.stats["waves"] += 1
-        if use_sectored:
-            self.stats["sectored_waves"] += 1
-        for s in active_slots:
-            req = self.active[s]
-            req.generated.append(int(next_tok[s]))
-            produced += 1
-            self.stats["decode_steps"] += 1
-            if use_sectored:
-                self.stats["sectored_steps"] += 1
-            if len(req.generated) >= req.max_new_tokens:
-                self._finish(s, req)
-        return produced
+    @property
+    def batched(self):
+        """Stacked per-slot states (leading slot axis)."""
+        return self.session.batched
 
 
 class LoopedEngine(_EngineBase):
-    """Reference per-slot engine: ``max_batch`` sequential decode calls per
-    step. Kept as the equivalence oracle for Engine and the baseline side of
-    benchmarks/serve_throughput.py — not a production path."""
+    """Per-slot reference shim: ``max_batch`` sequential decode calls per
+    step. Kept as the equivalence oracle for the vectorized wave."""
 
-    def __init__(self, prefill_fn, decode_fn, sectored_decode_fn=None,
-                 cfg: EngineConfig = EngineConfig(),
-                 demand_merge_fn: Callable | None = None):
-        super().__init__(prefill_fn, decode_fn, sectored_decode_fn, cfg,
-                         demand_merge_fn)
-        self.states: list = [None] * cfg.max_batch
+    _vectorized = False
 
-    def _install(self, slot: int, state):
-        self.states[slot] = state
-
-    def step(self) -> int:
-        self._admit()
-        active_slots = [s for s, r in enumerate(self.active) if r is not None]
-        if not active_slots:
-            return 0
-        use_sectored = self._select_path()
-
-        if (use_sectored and self.demand_merge is not None
-                and len(active_slots) > 1):
-            # mirror Engine's pre-wave OR-merge so the two engines stay
-            # token-equivalent in true-sectored mode: stack the active
-            # slots, pool demands, unstack
-            gids = self._merge_groups(active_slots)
-            # remap leader slot ids to subset-local indices: the stacked
-            # tree only holds the active slots
-            remap: dict[int, int] = {}
-            sub_gids = jnp.asarray(
-                [remap.setdefault(int(gids[s]), j)
-                 for j, s in enumerate(active_slots)], jnp.int32)
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                   *[self.states[s] for s in active_slots])
-            merged = self.demand_merge(stacked, sub_gids)
-            for j, s in enumerate(active_slots):
-                self.states[s] = jax.tree.map(lambda x: x[j], merged)
-
-        produced = 0
-        self.stats["waves"] += 1
-        if use_sectored:
-            self.stats["sectored_waves"] += 1
-        for slot in active_slots:
-            req = self.active[slot]
-            last = jnp.asarray([[req.generated[-1]]], jnp.int32)
-            fn = self.sectored_decode if use_sectored else self.decode
-            logits, new_state = fn(self.states[slot], last)
-            self.states[slot] = new_state
-            req.generated.append(int(np.argmax(np.asarray(logits[0]))))
-            produced += 1
-            self.stats["decode_steps"] += 1
-            if use_sectored:
-                self.stats["sectored_steps"] += 1
-            if len(req.generated) >= req.max_new_tokens:
-                self.states[slot] = None
-                self._finish(slot, req)
-        return produced
+    @property
+    def states(self) -> list:
+        return self.session.states

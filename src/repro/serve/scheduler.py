@@ -1,0 +1,156 @@
+"""Scheduler: *when accesses issue* — slot admission and wave composition,
+decoupled from the data path (paper §8.1's LSQ-lookahead layer).
+
+Two shipped policies:
+
+* ``FifoScheduler`` — reproduces the pre-redesign engine behaviour exactly:
+  free slots are filled from the queue head at the start of every step,
+  each admission running a blocking single-prompt prefill before the
+  decode wave is issued.
+* ``OverlapScheduler`` — double-buffers prefill against the in-flight
+  decode wave: the wave is dispatched first (JAX dispatch is
+  asynchronous), then queued prompts are prefilled *while the wave is in
+  flight* and parked in a ready buffer; they are installed into free slots
+  at the next step boundary. Prompts are prefilled in batches grouped by
+  length, and admission is **paged-KV**: a ready request joins the current
+  wave iff its page-padded decode-state signature matches the wave's, so
+  prompts of different raw lengths but the same length quantum share a
+  wave, while a different quantum waits for the wave to drain.
+
+On merge-free paths (dense backends, or sectored exact mode) both
+schedulers produce token-identical output on the same request trace
+(asserted in tests/test_serve_session.py): waves are vmapped over
+independent per-slot states, so *when* a request joins a wave never
+changes *what* it generates. Under the shared-prefix demand merge a
+slot's sector predictions CAN depend on which same-prefix slots are
+co-resident, so the guarantee there is only trace-level: both schedulers
+admit at the first step boundary with a free slot, and the sectored
+equivalence test covers that case empirically.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Admission + wave-composition policy driven by ``ServeSession``."""
+
+    def schedule(self, session) -> None:
+        """Fill free slots before the wave launches."""
+        ...
+
+    def overlap(self, session) -> None:
+        """Optional work while the decode wave is in flight."""
+        ...
+
+    def pending(self) -> int:
+        """Requests held by the scheduler (prefilled, not yet installed)."""
+        ...
+
+
+class FifoScheduler:
+    """Head-of-queue admission with blocking prefill (legacy behaviour)."""
+
+    name = "fifo"
+
+    def schedule(self, session) -> None:
+        for slot in session.free_slots():
+            if not session.queue:
+                break
+            handle = session.queue.popleft()
+            token, state = session.prefill_one(handle)
+            session.install(slot, handle, token, state)
+
+    def overlap(self, session) -> None:
+        pass
+
+    def pending(self) -> int:
+        return 0
+
+
+class OverlapScheduler:
+    """Prefill/decode overlap with a ready buffer and paged-KV admission.
+
+    ``prefill_ahead`` bounds the ready buffer (default: the session's
+    ``max_batch``) — prefilled-but-unadmitted requests hold device memory,
+    so the lookahead is capped like the paper's LSQ depth.
+    """
+
+    name = "overlap"
+
+    def __init__(self, prefill_ahead: int | None = None):
+        if prefill_ahead is not None and prefill_ahead < 1:
+            raise ValueError("prefill_ahead must be >= 1 (a zero budget "
+                             "would never admit queued requests)")
+        self.prefill_ahead = prefill_ahead
+        self._ready: collections.deque = collections.deque()
+
+    def pending(self) -> int:
+        return sum(len(group) for group in self._ready)
+
+    def schedule(self, session) -> None:
+        self._install_ready(session)
+        if not session.active_slots() and not self._ready and session.queue:
+            # cold start: no wave in flight to overlap with — prefill
+            # synchronously so the first wave doesn't idle
+            self._prefill_queued(session, overlapped=False)
+            self._install_ready(session)
+
+    def overlap(self, session) -> None:
+        if session.queue:
+            # only count the stat when a wave is genuinely in flight: the
+            # looped session blocks on its wave before calling overlap()
+            self._prefill_queued(session,
+                                 overlapped=session.wave_in_flight)
+
+    def _budget(self, session) -> int:
+        ahead = (self.prefill_ahead if self.prefill_ahead is not None
+                 else session.max_batch)
+        return ahead - self.pending()
+
+    def _install_ready(self, session) -> None:
+        # paged-KV admission, strictly head-of-line: the front group
+        # installs iff its padded-state signature matches the in-flight
+        # wave; a mismatched head PAUSES all admission (later groups may
+        # not overtake it — otherwise steady same-quantum traffic could
+        # starve it forever). With admission paused the active set only
+        # shrinks, the wave drains, and the head is then accepted against
+        # an empty wave. Each group installs as ONE multi-slot scatter; a
+        # group larger than the free slots is split and its tail keeps its
+        # place in line.
+        free = session.free_slots()
+        while self._ready and free:
+            group = self._ready[0]
+            if not session.wave_accepts(group.sig):
+                break
+            self._ready.popleft()
+            if len(group) > len(free):
+                group, tail = session.split_group(group, len(free))
+                self._ready.appendleft(tail)
+            session.install_group(free[:len(group)], group)
+            free = free[len(group):]
+
+    def _prefill_queued(self, session, *, overlapped: bool) -> int:
+        budget = self._budget(session)
+        taken = []
+        while session.queue and len(taken) < budget:
+            taken.append(session.queue.popleft())
+        if not taken:
+            return 0
+        # one stacked (vmapped) prefill per prompt-length run, split at
+        # length changes so admission order follows submission order
+        runs: list[list] = []
+        for handle in taken:
+            if runs and len(runs[-1][0].request.prompt) == len(
+                    handle.request.prompt):
+                runs[-1].append(handle)
+            else:
+                runs.append([handle])
+        for handles in runs:
+            self._ready.append(session.prefill_group(handles))
+        if overlapped:
+            session.stats["overlapped_prefills"] += len(taken)
+        return len(taken)

@@ -1,0 +1,488 @@
+"""ServeSession: the serving facade — policy/mechanism split per §8.1.
+
+The session composes three pluggable protocols:
+
+* :class:`~repro.serve.backend.DecodeBackend` — *how the chip executes*:
+  prefill / dense decode / sectored decode / demand merge as one object.
+* :class:`~repro.serve.scheduler.Scheduler` — *when accesses issue*: slot
+  admission and wave composition (FIFO, or prefill/decode overlap).
+* :class:`~repro.serve.policy.SectorPolicy` — *what the controller
+  fetches*: the dynamic sectored-on/off decision incl. hysteresis and
+  top-k fraction.
+
+``submit()`` returns a :class:`StreamHandle` (``poll()`` for new tokens,
+``tokens()`` for a driving iterator) instead of mutating the submitted
+``Request`` in place; the legacy ``Engine``/``LoopedEngine`` shims in
+``repro.serve.engine`` opt back into in-place mutation via
+``bind_request=True``.
+
+Wave execution comes in two flavors: vectorized (per-slot states stacked
+along a fresh leading slot axis, ONE ``jit(vmap)`` decode call per step)
+and looped (``max_batch`` sequential calls — the equivalence oracle).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.backend import DecodeBackend, ServingBackend
+from repro.serve.policy import HysteresisPolicy, SectorPolicy
+from repro.serve.scheduler import FifoScheduler, Scheduler
+
+PREFIX_KEY_TOKENS = 128  # tokens hashed into the shared-prefix group key
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def prefix_key(self) -> bytes:
+        """Requests with equal keys hit the same leading KV pages."""
+        return np.asarray(self.prompt[:PREFIX_KEY_TOKENS], np.int32).tobytes()
+
+
+def _leaf_signature(shape, dtype) -> tuple:
+    return (tuple(shape), str(dtype))
+
+
+def state_signature(state: Any) -> tuple:
+    """Shape/dtype fingerprint of a decode state — the page-padded KV
+    layout. Two states with equal signatures can share a vectorized wave."""
+    return tuple(_leaf_signature(x.shape, x.dtype)
+                 for x in jax.tree.leaves(state))
+
+
+def stacked_row_signature(stacked: Any) -> tuple:
+    """``state_signature`` of one row of a stacked state (leading request
+    axis stripped) — same format, so group and single-install admission
+    keys cannot drift."""
+    return tuple(_leaf_signature(x.shape[1:], x.dtype)
+                 for x in jax.tree.leaves(stacked))
+
+
+@dataclasses.dataclass
+class PrefillGroup:
+    """A batch of prefilled requests kept stacked (leading request axis).
+
+    Produced by ``ServeSession.prefill_group`` and consumed by
+    ``install_group`` as ONE multi-slot scatter — per-request rows are
+    never extracted, so admitting a group costs one buffer update instead
+    of ``n``. ``logits`` stays a lazy device array ((n, 1, vocab)): a
+    scheduler prefilling under an in-flight wave must not block on it;
+    first tokens are materialized at install time, when the device has
+    drained.
+    """
+
+    handles: list[StreamHandle]
+    logits: Any  # (n, 1, vocab), lazy
+    states: Any  # pytree, each leaf (n,) + row shape
+    sig: tuple  # per-row state signature (paged-KV admission key)
+
+    def __len__(self) -> int:
+        return len(self.handles)
+
+
+class StreamHandle:
+    """Streaming view of one request's generation.
+
+    ``poll()`` returns tokens produced since the last poll without driving
+    the session; ``tokens()`` is an iterator that steps the session until
+    this request completes, yielding tokens as they land.
+    """
+
+    def __init__(self, session: "ServeSession", request: Request):
+        self.request = request
+        self.done = False
+        self._session = session
+        self._tokens: list[int] = []
+        self._cursor = 0
+        self._bound = False  # legacy shims mirror state into the Request
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def last_token(self) -> int:
+        return self._tokens[-1]
+
+    def peek(self) -> list[int]:
+        """All tokens produced so far (does not advance the poll cursor)."""
+        return list(self._tokens)
+
+    def poll(self) -> list[int]:
+        """New tokens since the last ``poll()`` (non-blocking)."""
+        new = self._tokens[self._cursor:]
+        self._cursor += len(new)
+        return new
+
+    def tokens(self, max_steps: int = 10_000) -> Iterator[int]:
+        """Yield this request's tokens, stepping the session as needed."""
+        steps = 0
+        while True:
+            yield from self.poll()
+            if self.done:
+                return
+            self._session.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("request did not complete")
+
+    def result(self, max_steps: int = 10_000) -> list[int]:
+        """Drive the session until this request completes; all tokens."""
+        for _ in self.tokens(max_steps=max_steps):
+            pass
+        return self.peek()
+
+
+class ServeSession:
+    """Facade over backend + scheduler + policy; owns slots and waves."""
+
+    def __init__(self, backend: DecodeBackend, *, max_batch: int = 8,
+                 scheduler: Scheduler | None = None,
+                 policy: SectorPolicy | None = None,
+                 vectorized: bool = True):
+        self.backend = backend
+        self.max_batch = max_batch
+        self.scheduler = scheduler if scheduler is not None else FifoScheduler()
+        self.policy = policy if policy is not None else HysteresisPolicy()
+        self.vectorized = vectorized
+        self.queue: collections.deque[StreamHandle] = collections.deque()
+        self.slots: list[StreamHandle | None] = [None] * max_batch
+        self.completion_order: list[int] = []
+        self.stats = self._zero_stats()
+        # vectorized wave state: stacked per-slot pytree + its row signature
+        self.batched = None
+        self._batched_sig: tuple | None = None
+        # looped wave state: one pytree per slot
+        self.states: list = [None] * max_batch
+        self._wave_cache: dict[int, Any] = {}
+        self._vmapped_prefill = None
+        self.wave_in_flight = False  # True between dispatch and blocking
+
+    @staticmethod
+    def _zero_stats() -> dict[str, int]:
+        return dict(decode_steps=0, sectored_steps=0, completed=0, waves=0,
+                    sectored_waves=0, merged_slots=0, overlapped_prefills=0,
+                    prefill_calls=0)
+
+    def reset_stats(self) -> None:
+        self.stats = self._zero_stats()
+
+    # -- request lifecycle ------------------------------------------------
+
+    def submit(self, request: Request, *,
+               bind_request: bool = False) -> StreamHandle:
+        """Queue a request; returns its streaming handle.
+
+        ``bind_request=True`` restores the legacy contract for the
+        ``Engine`` shims: tokens are mirrored into ``request.generated``
+        (shared list) and ``request.done`` is set on completion.
+        """
+        handle = StreamHandle(self, request)
+        if bind_request:
+            handle._tokens = request.generated
+            handle._bound = True
+        self.queue.append(handle)
+        return handle
+
+    @property
+    def occupancy(self) -> float:
+        return sum(h is not None for h in self.slots) / self.max_batch
+
+    def active_slots(self) -> list[int]:
+        return [s for s, h in enumerate(self.slots) if h is not None]
+
+    def free_slots(self) -> list[int]:
+        return [s for s, h in enumerate(self.slots) if h is None]
+
+    @property
+    def idle(self) -> bool:
+        return (not self.queue and not self.active_slots()
+                and not self.scheduler.pending())
+
+    # -- prefill / admission (driven by the Scheduler) --------------------
+
+    def prefill_one(self, handle: StreamHandle):
+        """Blocking single-prompt prefill; returns (first_token, state)."""
+        logits, state = self.backend.prefill_fn(handle.request.prompt[None, :])
+        self.stats["prefill_calls"] += 1
+        return int(np.argmax(np.asarray(logits[0]))), state
+
+    def prefill_group(self, handles: list[StreamHandle]) -> PrefillGroup:
+        """One prefill call over same-length prompts, kept stacked.
+
+        Groups of two or more go through a vmapped prefill (ONE dispatch
+        for the whole group); singletons take the exact ``prefill_one``
+        data path with a unit leading axis added. Nothing here blocks on
+        device results — see :class:`PrefillGroup`.
+        """
+        lengths = {len(h.request.prompt) for h in handles}
+        if len(lengths) != 1:
+            raise ValueError(f"prefill_group needs equal prompt lengths, "
+                             f"got {sorted(lengths)}")
+        self.stats["prefill_calls"] += 1
+        if len(handles) == 1:
+            logits, state = self.backend.prefill_fn(
+                handles[0].request.prompt[None, :])
+            stacked = jax.tree.map(lambda x: x[None], state)
+            logits = logits[None]  # (1, 1, vocab)
+        else:
+            if self._vmapped_prefill is None:
+                prefill_fn = self.backend.prefill_fn
+                self._vmapped_prefill = jax.jit(
+                    jax.vmap(lambda p: prefill_fn(p[None, :])))
+            prompts = jnp.asarray(
+                np.stack([h.request.prompt for h in handles]), jnp.int32)
+            logits, stacked = self._vmapped_prefill(prompts)
+        return PrefillGroup(list(handles), logits, stacked,
+                            stacked_row_signature(stacked))
+
+    @staticmethod
+    def split_group(group: PrefillGroup,
+                    k: int) -> tuple[PrefillGroup, PrefillGroup]:
+        """Split a prefill group when fewer than ``len(group)`` slots are
+        free; both halves keep the stacked layout."""
+        head = PrefillGroup(group.handles[:k], group.logits[:k],
+                            jax.tree.map(lambda x: x[:k], group.states),
+                            group.sig)
+        tail = PrefillGroup(group.handles[k:], group.logits[k:],
+                            jax.tree.map(lambda x: x[k:], group.states),
+                            group.sig)
+        return head, tail
+
+    def wave_accepts(self, sig: tuple) -> bool:
+        """Paged-KV admission check: can a state with this page-padded
+        signature join the current wave? Looped slots are independent, so
+        always; vectorized waves need matching rows unless empty."""
+        return (not self.vectorized or self.batched is None
+                or self._batched_sig == sig or not self.active_slots())
+
+    def _prepare_wave_buffer(self, sig: tuple, row_shape_of) -> None:
+        """(Re)build the stacked wave buffer for a row signature, or raise
+        if the signature cannot join the in-flight wave."""
+        if (self.batched is None
+                or (self._batched_sig != sig and not self.active_slots())):
+            self.batched = row_shape_of()
+            self._batched_sig = sig
+        elif self._batched_sig != sig:
+            raise ValueError(
+                f"state signature {sig} cannot join the in-flight wave "
+                f"(wave signature {self._batched_sig}); use a paged-KV "
+                f"aware scheduler (OverlapScheduler) for mixed quanta")
+
+    def install(self, slot: int, handle: StreamHandle, first_token: int,
+                state) -> None:
+        """Place one prefilled request into a slot and emit its first
+        token (the FIFO admission path)."""
+        if self.vectorized:
+            self._prepare_wave_buffer(
+                state_signature(state),
+                lambda: jax.tree.map(
+                    lambda x: jnp.zeros((self.max_batch,) + x.shape, x.dtype),
+                    state))
+            self.batched = jax.tree.map(
+                lambda big, small: big.at[slot].set(small),
+                self.batched, state)
+        else:
+            self.states[slot] = state
+        self._emit_first(slot, handle, first_token)
+
+    def install_group(self, slots: list[int], group: PrefillGroup) -> None:
+        """Admit a whole prefill group with ONE multi-slot scatter.
+
+        ``len(slots)`` must equal ``len(group)`` (use ``split_group`` when
+        fewer slots are free). First tokens are materialized here — by the
+        time a scheduler installs, the wave the prefill overlapped with has
+        drained, so the read doesn't stall a wave window.
+        """
+        if len(slots) != len(group):
+            raise ValueError(f"{len(group)} prefilled requests for "
+                             f"{len(slots)} slots")
+        if self.vectorized:
+            self._prepare_wave_buffer(
+                group.sig,
+                lambda: jax.tree.map(
+                    lambda x: jnp.zeros((self.max_batch,) + x.shape[1:],
+                                        x.dtype), group.states))
+            idx = jnp.asarray(np.asarray(slots, np.int32))
+            self.batched = jax.tree.map(
+                lambda big, rows: big.at[idx].set(rows),
+                self.batched, group.states)
+        else:
+            for j, slot in enumerate(slots):
+                self.states[slot] = jax.tree.map(lambda x: x[j], group.states)
+        tokens = np.asarray(jnp.argmax(group.logits, axis=-1)).reshape(
+            len(group), -1)[:, 0]
+        for j, (slot, handle) in enumerate(zip(slots, group.handles)):
+            self._emit_first(slot, handle, int(tokens[j]))
+
+    def _emit_first(self, slot: int, handle: StreamHandle,
+                    first_token: int) -> None:
+        """Activate a slot and emit the prefill token; a request whose
+        quota the prefill token already meets (max_new_tokens <= 1)
+        completes here without burning a decode wave."""
+        self.slots[slot] = handle
+        handle._tokens.append(first_token)
+        if len(handle._tokens) >= handle.request.max_new_tokens:
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        handle = self.slots[slot]
+        handle.done = True
+        if handle._bound:
+            handle.request.done = True
+        self.slots[slot] = None
+        if not self.vectorized:
+            self.states[slot] = None
+        self.completion_order.append(handle.rid)
+        self.stats["completed"] += 1
+
+    # -- demand merge (shared-prefix OR-merge, LSQ-Lookahead analogue) ----
+
+    def _group_ids(self) -> np.ndarray:
+        """(max_batch,) int32: slots whose requests share a prompt prefix
+        get the same id (the leader slot's index); free slots their own."""
+        gids = np.arange(self.max_batch, dtype=np.int32)
+        leaders: dict[bytes, int] = {}
+        for slot, handle in enumerate(self.slots):
+            if handle is None:
+                continue
+            gids[slot] = leaders.setdefault(handle.request.prefix_key, slot)
+        return gids
+
+    def _merge_groups(self, active_slots: list[int]) -> np.ndarray:
+        """Group ids for a sectored wave + merged_slots accounting, shared
+        by both wave flavors so their merge behaviour cannot diverge."""
+        gids = self._group_ids()
+        n_groups = len({int(gids[s]) for s in active_slots})
+        self.stats["merged_slots"] += len(active_slots) - n_groups
+        return gids
+
+    def _merge_demands(self, active_slots: list[int]) -> None:
+        # group ids stay host-side numpy: the merge fn validates them
+        # without a device sync in front of the wave dispatch
+        if self.vectorized:
+            gids = self._merge_groups(active_slots)
+            self.batched = self.backend.merge_demands(self.batched, gids)
+            return
+        if len(active_slots) <= 1:
+            return
+        # looped flavor: stack the active slots, pool demands, unstack;
+        # leader slot ids are remapped to subset-local indices first
+        gids = self._merge_groups(active_slots)
+        remap: dict[int, int] = {}
+        sub_gids = np.asarray(
+            [remap.setdefault(int(gids[s]), j)
+             for j, s in enumerate(active_slots)], np.int32)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[self.states[s] for s in active_slots])
+        merged = self.backend.merge_demands(stacked, sub_gids)
+        for j, s in enumerate(active_slots):
+            self.states[s] = jax.tree.map(lambda x: x[j], merged)
+
+    # -- wave execution ---------------------------------------------------
+
+    def _wave_for(self, fn):
+        wave = self._wave_cache.get(id(fn))
+        if wave is None:
+            wave = jax.jit(jax.vmap(fn))
+            self._wave_cache[id(fn)] = wave
+        return wave
+
+    def step(self) -> int:
+        """Admit + one decode wave. Returns tokens produced."""
+        self.scheduler.schedule(self)
+        active = self.active_slots()
+        if not active:
+            return 0
+        decision = self.policy.decide(self.occupancy, self.stats)
+        use_sectored = bool(decision.use_sectored
+                            and self.backend.supports_sectored)
+        if (use_sectored and decision.merge_demands
+                and self.backend.demand_merge_fn is not None):
+            self._merge_demands(active)
+        fn = (self.backend.sectored_fn_for(decision.topk_frac)
+              if use_sectored else self.backend.decode_fn)
+        self.stats["waves"] += 1
+        if use_sectored:
+            self.stats["sectored_waves"] += 1
+        if self.vectorized:
+            # dispatch the wave (async), let the scheduler overlap prefill
+            # work with it, then block on the results
+            logits = self._launch_vectorized(active, fn)
+            self.wave_in_flight = True
+            try:
+                self.scheduler.overlap(self)
+            finally:
+                self.wave_in_flight = False
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(
+                self.max_batch, -1)[:, 0]
+            produced = self._emit_wave(active, next_tok, use_sectored)
+        else:
+            next_tok = self._run_looped(active, fn)
+            self.scheduler.overlap(self)
+            produced = self._emit_wave(active, next_tok, use_sectored)
+        return produced
+
+    def _launch_vectorized(self, active: list[int], fn):
+        tokens = np.zeros((self.max_batch, 1, 1), np.int32)
+        for s in active:
+            tokens[s, 0, 0] = self.slots[s].last_token
+        logits, self.batched = self._wave_for(fn)(
+            self.batched, jnp.asarray(tokens))
+        return logits
+
+    def _run_looped(self, active: list[int], fn) -> np.ndarray:
+        next_tok = np.zeros((self.max_batch,), np.int32)
+        for s in active:
+            last = jnp.asarray([[self.slots[s].last_token]], jnp.int32)
+            logits, self.states[s] = fn(self.states[s], last)
+            next_tok[s] = int(np.argmax(np.asarray(logits[0])))
+        return next_tok
+
+    def _emit_wave(self, active: list[int], next_tok: np.ndarray,
+                   use_sectored: bool) -> int:
+        produced = 0
+        for s in active:
+            handle = self.slots[s]
+            handle._tokens.append(int(next_tok[s]))
+            produced += 1
+            self.stats["decode_steps"] += 1
+            if use_sectored:
+                self.stats["sectored_steps"] += 1
+            if len(handle._tokens) >= handle.request.max_new_tokens:
+                self._finish(s)
+        return produced
+
+    def run_until_drained(self, max_steps: int = 10_000) -> dict[str, int]:
+        steps = 0
+        while not self.idle:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("engine did not drain")
+        return self.stats
+
+
+def make_session(backend_or_fns, *, max_batch: int = 8,
+                 scheduler: Scheduler | None = None,
+                 policy: SectorPolicy | None = None,
+                 vectorized: bool = True) -> ServeSession:
+    """Convenience constructor accepting a backend or the legacy 4-tuple."""
+    if isinstance(backend_or_fns, (tuple, list)):
+        backend_or_fns = ServingBackend(*backend_or_fns)
+    return ServeSession(backend_or_fns, max_batch=max_batch,
+                        scheduler=scheduler, policy=policy,
+                        vectorized=vectorized)

@@ -1,7 +1,7 @@
 """Serving runtime: sectored decode parity/approximation, predictor
-learning, continuous-batching engine."""
-
-import functools
+learning, continuous-batching engine (legacy Engine shims over
+ServeSession — the session-level API is covered in
+tests/test_serve_session.py)."""
 
 import jax
 import jax.numpy as jnp
@@ -240,8 +240,12 @@ def test_engine_merge_counted_in_stats(setup):
     """Requests sharing a prompt prefix are grouped; the engine pools their
     demands before each sectored wave and counts the merged slots."""
     cfg, params = setup
-    pf, exact_fn, sect_fn, merge_fn = sectored_decode.make_serving_fns(
-        cfg, params=params, seq_len=48)
+    backend = sectored_decode.make_serving_fns(cfg, params=params, seq_len=48)
+    # the backend still unpacks as the legacy 4-tuple for old call sites
+    pf, exact_fn, sect_fn, merge_fn = backend
+    assert (pf, exact_fn, sect_fn, merge_fn) == (
+        backend.prefill_fn, backend.decode_fn, backend.sectored_fn,
+        backend.demand_merge_fn)
     eng = engine_mod.Engine(
         pf, exact_fn, sect_fn,
         engine_mod.EngineConfig(max_batch=2, sectored_min_occupancy=0.5),
