@@ -2,6 +2,9 @@
 
 from __future__ import annotations
 
+import json
+import pathlib
+import subprocess
 import time
 
 import numpy as np
@@ -13,6 +16,36 @@ from repro.data import traces
 #: SimPoints; statistics converge far earlier in the synthetic model.
 N_INSTR = 200_000
 N_MIXES = 6  # paper: 16; default trimmed for runtime (use --full for 16)
+
+#: BENCH_*.json payload schema. Bump when a writer changes field meanings
+#: (v2 added the git_commit / schema_version provenance stamp itself).
+BENCH_SCHEMA_VERSION = 2
+
+
+def git_commit() -> str:
+    """Current commit hash for BENCH provenance ('unknown' outside git)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=pathlib.Path(__file__).resolve().parent)
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_bench_json(path, payload: dict) -> pathlib.Path:
+    """Write a BENCH_*.json result stamped with provenance fields.
+
+    Every emitted payload carries ``git_commit`` and ``schema_version`` so
+    results collected across PRs (CI uploads them as artifacts) stay
+    attributable and parseable.
+    """
+    payload = dict(payload)
+    payload["git_commit"] = git_commit()
+    payload.setdefault("schema_version", BENCH_SCHEMA_VERSION)
+    path = pathlib.Path(path)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
 
 
 def timed(fn, *args, **kw):

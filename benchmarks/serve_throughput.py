@@ -23,8 +23,6 @@ Run: PYTHONPATH=src python benchmarks/serve_throughput.py [--max-batch 4]
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 import time
 
 import jax
@@ -34,6 +32,11 @@ from repro import configs
 from repro.models import model
 from repro.serve import (FifoScheduler, OverlapScheduler, Request,
                          ServeSession, ServingBackend)
+
+try:
+    from benchmarks import common
+except ImportError:  # run as `python benchmarks/serve_throughput.py`
+    import common
 
 PROMPT_LEN = 8  # fixed so prefill compiles once, outside the timed region
 
@@ -142,8 +145,7 @@ def main(argv=None):
                   tokens_per_sec={m: round(t, 1) for m, t in tps.items()},
                   vectorized_speedup=round(tps["fifo"] / tps["looped"], 3),
                   overlap_speedup=round(tps["overlap"] / tps["fifo"], 3))
-    out = pathlib.Path(args.out)
-    out.write_text(json.dumps(result, indent=2) + "\n")
+    out = common.write_bench_json(args.out, result)
     print(f"wrote {out}")
 
     if args.max_batch >= 4:

@@ -25,8 +25,9 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.sectors import NUM_SECTORS
+from repro.core.sectors import BLOCK_BYTES, NUM_SECTORS
 from repro.core.timing import DDR4Timing, DEFAULT_TIMING
 
 VDD = 1.2  # volts
@@ -140,6 +141,70 @@ class DRAMEnergyModel:
 
 
 DEFAULT_ENERGY = DRAMEnergyModel()
+
+
+# --- KV-fetch energy mapping (serving telemetry, Fig. 9 anchors) -------------
+#
+# The serving stack's KV pages play the paper's *sectors*: one DRAM row holds
+# ``NUM_SECTORS`` consecutive pages, and a decode step that fetches K of a
+# sequence's P valid pages is a Sectored-Activation row access that enables
+# only K local-wordline groups. Data movement (RD/WR) is charged per 64-byte
+# block at the full-burst energy — the savings there come from the pages NOT
+# moved (the paper's channel-byte reduction, Fig. 14), while the ACT component
+# carries the Fig. 9 nonlinearity: periphery power is paid per activation
+# regardless of how few sectors it enables.
+
+FULL_BURST_BEATS = 8  # DDR4 BL8: beats per full burst; BLOCK_BYTES==8B x 8
+
+
+def kv_fetch_energy(pages_fetched: float, pages_valid: float, *,
+                    page_bytes: float, sectored_hw: bool = True,
+                    model: DRAMEnergyModel = DEFAULT_ENERGY) -> dict[str, float]:
+    """Energy (joules) to read ``pages_fetched`` of ``pages_valid`` KV pages.
+
+    Page counts may be fractional: the newest, partially-filled page moves
+    only the bytes written so far (the VBL analogue — a shortened burst),
+    but still costs a whole enabled sector on the ACT side (sector
+    activation is all-or-nothing, §4.1).
+
+    ``sectored_hw=False`` models the coarse-grained baseline: every touched
+    row pays a full 8-sector activation with no sector-logic overhead, and
+    all valid pages are moved (``pages_fetched`` is ignored).
+
+    Returns ``{"act_j", "rd_j", "acts", "sectors"}``.
+    """
+    if pages_valid <= 0:
+        return dict(act_j=0.0, rd_j=0.0, acts=0, sectors=0.0)
+    valid_sectors = int(np.ceil(pages_valid))
+    rows_valid = (valid_sectors + NUM_SECTORS - 1) // NUM_SECTORS
+    blocks_per_page = page_bytes / BLOCK_BYTES
+    if not sectored_hw:
+        act_j = rows_valid * float(model.act_energy(NUM_SECTORS,
+                                                    sectored_hw=False))
+        rd_j = pages_valid * blocks_per_page * float(model.rd_energy(FULL_BURST_BEATS))
+        return dict(act_j=act_j, rd_j=rd_j, acts=rows_valid,
+                    sectors=float(rows_valid * NUM_SECTORS))
+    fetched_sectors = min(int(np.ceil(pages_fetched)), valid_sectors)
+    if fetched_sectors <= 0:
+        return dict(act_j=0.0, rd_j=0.0, acts=0, sectors=0.0)
+    # fetched sectors spread over the valid rows; ACT energy is affine in
+    # enabled sectors, so only the (acts, total sectors) pair matters
+    acts = min(rows_valid, fetched_sectors)
+    act_j = acts * float(model.act_energy(fetched_sectors / acts))
+    rd_j = min(float(pages_fetched), float(pages_valid)) * blocks_per_page \
+        * float(model.rd_energy(FULL_BURST_BEATS))
+    return dict(act_j=act_j, rd_j=rd_j, acts=acts,
+                sectors=float(fetched_sectors))
+
+
+def kv_append_energy(token_bytes: float, *,
+                     model: DRAMEnergyModel = DEFAULT_ENERGY) -> float:
+    """WRITE energy (joules) for appending one token's K+V to the cache.
+
+    Identical on every path — dense and sectored decode both write exactly
+    the new token — so it never changes an energy *ordering*, only the
+    absolute J/token scale."""
+    return token_bytes / BLOCK_BYTES * float(model.wr_energy(FULL_BURST_BEATS))
 
 
 # --- processor power model (paper §6.2) --------------------------------------

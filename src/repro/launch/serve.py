@@ -23,6 +23,13 @@ Scheduler modes (``--scheduler``):
 ``--engine looped`` swaps in the per-slot reference wave (for comparison;
 ``benchmarks/serve_throughput.py`` measures the gap and writes
 ``BENCH_serve.json``).
+
+``--telemetry`` wraps the backend in a ``MeteredBackend``: every wave is
+charged against the paper's calibrated DRAM power model and an end-of-run
+energy/coverage table is printed (``--trace-out`` additionally dumps the
+per-wave trace as JSONL). ``--policy adaptive`` runs the coverage-driven
+``AdaptiveSectorPolicy`` over the meter's recorder (implies
+``--telemetry``).
 """
 
 from __future__ import annotations
@@ -33,12 +40,15 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core import metrics
 from repro.models import model
 from repro.runtime import sectored_decode
-from repro.serve import (EngineConfig, FifoScheduler, HysteresisPolicy,
+from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
+                         EngineConfig, FifoScheduler, HysteresisPolicy,
                          OverlapScheduler, Request, ServeSession,
                          ServingBackend)
 from repro.serve import engine as engine_mod  # noqa: F401  (legacy re-export)
+from repro.telemetry import KVGeometry, MeteredBackend
 
 
 def build_backend(cfg, params, *, sectored=True, true_sectored=False,
@@ -73,14 +83,41 @@ def build_backend(cfg, params, *, sectored=True, true_sectored=False,
     return ServingBackend(prefill_fn, decode_fn, sect_fn)
 
 
+def build_policy(name, recorder=None):
+    """Shipped SectorPolicy lineup (``--policy``); ``adaptive`` needs the
+    meter's TraceRecorder as its coverage source."""
+    if name == "adaptive":
+        if recorder is None:
+            raise ValueError("adaptive policy needs telemetry "
+                             "(pass --telemetry / a recorder)")
+        return AdaptiveSectorPolicy(recorder)
+    return {"hysteresis": HysteresisPolicy, "dense": AlwaysDense,
+            "sectored": AlwaysSectored}[name]()
+
+
 def build_session(cfg, params, *, max_batch=4, sectored=True,
                   scheduler="fifo", vectorized=True, true_sectored=False,
-                  seq_len=256) -> ServeSession:
+                  seq_len=256, telemetry=False, policy="hysteresis") -> ServeSession:
     backend = build_backend(cfg, params, sectored=sectored,
                             true_sectored=true_sectored, seq_len=seq_len)
+    if telemetry or policy == "adaptive":
+        # the dense DecodeState backend carries no kv_geometry(); derive one
+        # from the model config so the meter can convert counters to joules
+        geometry = (None if true_sectored else KVGeometry.from_model_cfg(
+            cfg, seq_len=seq_len, page_size=sectored_decode.PAGE_SIZE))
+        backend = MeteredBackend(backend, geometry=geometry)
+        if policy == "adaptive" and backend.k_for(None) is None:
+            # without a per-k backend the adaptive fraction would be a
+            # silent no-op reported as adaptive results — refuse loudly
+            raise ValueError(
+                "--policy adaptive needs a backend that resolves topk_frac "
+                "to a page budget; add --true-sectored")
+        pol = build_policy(policy, backend.meter.recorder)
+    else:
+        pol = build_policy(policy)
     sched = OverlapScheduler() if scheduler == "overlap" else FifoScheduler()
     return ServeSession(backend, max_batch=max_batch, scheduler=sched,
-                        policy=HysteresisPolicy(), vectorized=vectorized)
+                        policy=pol, vectorized=vectorized)
 
 
 def build_engine(cfg, params, max_batch=4, sectored=True, *,
@@ -111,16 +148,28 @@ def main(argv=None):
     ap.add_argument("--true-sectored", action="store_true",
                     help="serve on SectoredState (exact/top-k paths + "
                          "shared-prefix demand merge)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="meter every wave against the DRAM power model "
+                         "and print an end-of-run energy/coverage table")
+    ap.add_argument("--policy", default="hysteresis",
+                    choices=["hysteresis", "dense", "sectored", "adaptive"],
+                    help="SectorPolicy; adaptive = coverage-driven topk_frac "
+                         "(implies --telemetry)")
+    ap.add_argument("--trace-out", default=None,
+                    help="with --telemetry: dump the per-wave trace JSONL "
+                         "here")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params = model.init_params(cfg, jax.random.key(0))
+    telemetry = args.telemetry or args.policy == "adaptive"
     sess = build_session(cfg, params, max_batch=args.max_batch,
                          scheduler=args.scheduler,
                          vectorized=args.engine == "vectorized",
-                         true_sectored=args.true_sectored)
+                         true_sectored=args.true_sectored,
+                         telemetry=telemetry, policy=args.policy)
     rng = np.random.default_rng(0)
     handles = []
     for rid in range(args.requests):
@@ -137,6 +186,39 @@ def main(argv=None):
           f"overlapped_prefills={stats['overlapped_prefills']} "
           f"kv_bytes_saved_at_32k="
           f"{sectored_decode.bytes_saved_fraction(32768):.2f}")
+    if telemetry:
+        print_energy_report(sess, handles, trace_out=args.trace_out)
+
+
+def print_energy_report(sess, handles, *, trace_out=None) -> None:
+    """End-of-run energy/coverage table from the session's WaveMeter."""
+    meter = sess.meter
+    report = meter.report()
+    tokens = report["tokens"]
+    print("-- telemetry ---------------------------------------------------")
+    print(f"waves={report['waves']} (sectored={report['sectored_waves']} "
+          f"dense={report['dense_waves']}) tokens={tokens} "
+          f"demand_merges={report['demand_merges']}")
+    print(f"pages fetched/valid: {report['pages_fetched']:.1f}/"
+          f"{report['pages_valid']:.1f} "
+          f"(coverage={report['sector_coverage']:.3f}, "
+          f"EMA={report['ema'].get('sector_coverage', float('nan')):.3f}, "
+          f"attn-mass EMA={report['ema'].get('attn_mass', float('nan')):.3f})")
+    print(f"DRAM energy: {report['energy_j'] * 1e3:.3f} mJ "
+          f"(act={report['act_j'] * 1e3:.3f} rd={report['rd_j'] * 1e3:.3f} "
+          f"wr={report['wr_j'] * 1e3:.3f} prefill={report['prefill_j'] * 1e3:.3f}) "
+          f"| {metrics.dram_energy_per_token(report['energy_j'], tokens) * 1e6:.3f} uJ/token "
+          f"| wall={report['wall_s']:.3f}s")
+    for h in handles[:8]:
+        t = h.telemetry
+        print(f"  rid={h.rid:3d} tokens={t['tokens']:4d} "
+              f"energy={t['energy_j'] * 1e6:9.3f} uJ "
+              f"({metrics.dram_energy_per_token(t['energy_j'], t['tokens']) * 1e6:.3f} uJ/tok)")
+    if len(handles) > 8:
+        print(f"  ... {len(handles) - 8} more requests")
+    if trace_out:
+        path = meter.recorder.to_jsonl(trace_out)
+        print(f"wrote per-wave trace: {path}")
 
 
 if __name__ == "__main__":

@@ -48,8 +48,14 @@ def n_pages(seq_len: int) -> int:
     return (seq_len + PAGE_SIZE - 1) // PAGE_SIZE
 
 
-def topk_for(seq_len: int, frac: float = TOPK_FRAC) -> int:
-    return max(int(n_pages(seq_len) * frac), MIN_TOPK)
+def topk_for(seq_len: int, frac: float = TOPK_FRAC,
+             min_topk: int = MIN_TOPK) -> int:
+    """Pages a fraction resolves to, floored at ``min_topk``.
+
+    The default floor (4 pages) is a quality guard for production serving;
+    energy studies that sweep the fetch budget to the bottom of the range
+    (``benchmarks/serve_energy.py``) lower it explicitly."""
+    return max(int(n_pages(seq_len) * frac), min_topk, 1)
 
 
 @dataclasses.dataclass
@@ -273,19 +279,21 @@ class SectoredKVBackend(ServingBackend):
     """
 
     def __init__(self, cfg, params, *, seq_len: int,
-                 topk_frac: float = TOPK_FRAC):
+                 topk_frac: float = TOPK_FRAC, min_topk: int = MIN_TOPK):
         self.cfg = cfg
         self.params = params
         self.seq_len = seq_len
         self.topk_frac = topk_frac
+        self.min_topk = min_topk
         self.pages = ((n_pages(seq_len + 8) + 7) // 8) * 8
         self._k_cache: dict[int, Any] = {}
-        k_top = min(topk_for(seq_len, topk_frac), self.pages)
+        self._prefill_cache: dict[int, Any] = {}
         # jitted single-token steps: compiled once per token shape, so
         # prefill (on the admission critical path) and looped-wave decode
         # don't pay per-op eager dispatch for a full model traversal
         exact_fn = self._step_for(self.pages)  # every page: exact mode
-        super().__init__(self._prefill, exact_fn, self._step_for(k_top),
+        super().__init__(self._prefill, exact_fn,
+                         self._step_for(self.k_for(topk_frac)),
                          or_merge_demands)
 
     def _step_for(self, k_pages: int):
@@ -297,23 +305,64 @@ class SectoredKVBackend(ServingBackend):
             self._k_cache[k_pages] = fn
         return fn
 
+    def k_for(self, topk_frac: float | None = None) -> int:
+        """Concrete page budget a policy fraction resolves to — the number
+        the telemetry meter charges fetch energy for (None = default)."""
+        if topk_frac is None:
+            topk_frac = self.topk_frac
+        return min(topk_for(self.seq_len, topk_frac, self.min_topk),
+                   self.pages)
+
+    def kv_geometry(self):
+        """Cache layout for :class:`repro.telemetry.meters.WaveMeter`."""
+        from repro.telemetry.meters import KVGeometry
+        return KVGeometry.from_model_cfg(self.cfg, seq_len=self.seq_len,
+                                         page_size=PAGE_SIZE,
+                                         total_pages=self.pages)
+
     def sectored_fn_for(self, topk_frac: float | None):
         if topk_frac is None:
             return self.sectored_fn
-        return self._step_for(
-            min(topk_for(self.seq_len, topk_frac), self.pages))
+        return self._step_for(self.k_for(topk_frac))
 
     def _prefill(self, tokens):
+        """Exact-mode prefill as ONE jitted ``lax.scan`` over the prompt
+        (compiled per prompt length). The scan body is the same exact-mode
+        step the dense decode path runs, so prefill numerics are shared by
+        every scheduler/policy combination; the scan replaces the former
+        per-token Python loop of jitted steps (S dispatches -> 1), which
+        multi-page prompts (energy benchmarks, long-context serving) made
+        an admission bottleneck.
+        """
         tokens = jnp.asarray(tokens, jnp.int32)
-        state = init_state(self.cfg, tokens.shape[0], self.seq_len)
-        logits = None
-        for i in range(tokens.shape[1]):
-            logits, state = self.decode_fn(state, tokens[:, i:i + 1])
-        return logits, state
+        fn = self._prefill_cache.get(tokens.shape[1])
+        if fn is None:
+            cfg, params = self.cfg, self.params
+            seq_len, k_pages = self.seq_len, self.pages
+
+            def prefill(tokens):
+                state = init_state(cfg, tokens.shape[0], seq_len)
+                logits, state = sectored_decode_step(
+                    params, cfg, state, tokens[:, :1], k_pages)
+
+                def body(carry, tok):
+                    _, state = carry
+                    logits, state = sectored_decode_step(
+                        params, cfg, state, tok[:, None], k_pages)
+                    return (logits, state), None
+
+                (logits, state), _ = jax.lax.scan(
+                    body, (logits, state), tokens[:, 1:].T)
+                return logits, state
+
+            fn = jax.jit(prefill)
+            self._prefill_cache[tokens.shape[1]] = fn
+        return fn(tokens)
 
 
 def make_serving_fns(cfg, *, params, seq_len: int,
-                     topk_frac: float = TOPK_FRAC) -> SectoredKVBackend:
+                     topk_frac: float = TOPK_FRAC,
+                     min_topk: int = MIN_TOPK) -> SectoredKVBackend:
     """Build the SectoredState serving backend.
 
     Returns a :class:`SectoredKVBackend`; it still unpacks as the legacy
@@ -321,7 +370,7 @@ def make_serving_fns(cfg, *, params, seq_len: int,
     pre-redesign call sites.
     """
     return SectoredKVBackend(cfg, params, seq_len=seq_len,
-                             topk_frac=topk_frac)
+                             topk_frac=topk_frac, min_topk=min_topk)
 
 
 def bytes_saved_fraction(seq_len: int, topk_frac: float = TOPK_FRAC) -> float:

@@ -20,13 +20,22 @@ controller:
 * :mod:`repro.serve.engine` — legacy ``Engine`` / ``LoopedEngine`` shims
   over ``ServeSession`` for pre-redesign call sites.
 
+Energy observability rides on top: wrap any backend in
+:class:`repro.telemetry.meters.MeteredBackend` and the session meters
+every wave against the paper's calibrated DRAM power model (per-request
+attribution via ``StreamHandle.telemetry`` / ``energy_j``;
+``AdaptiveSectorPolicy`` closes the loop from observed coverage back to
+``PathDecision.topk_frac``). See the "Telemetry & energy accounting"
+section of ``docs/serving.md``.
+
 See ``docs/serving.md`` for the full protocol reference and the mapping
 back to paper §8.1.
 """
 
 from repro.serve.backend import DecodeBackend, ServingBackend
 from repro.serve.engine import Engine, EngineConfig, LoopedEngine
-from repro.serve.policy import (AlwaysDense, AlwaysSectored, HysteresisPolicy,
+from repro.serve.policy import (AdaptiveSectorPolicy, AlwaysDense,
+                                AlwaysSectored, HysteresisPolicy,
                                 PathDecision, SectorPolicy)
 from repro.serve.scheduler import FifoScheduler, OverlapScheduler, Scheduler
 from repro.serve.session import (PrefillGroup, Request, ServeSession,
@@ -36,8 +45,8 @@ from repro.serve.session import (PrefillGroup, Request, ServeSession,
 __all__ = [
     "DecodeBackend", "ServingBackend",
     "Engine", "EngineConfig", "LoopedEngine",
-    "AlwaysDense", "AlwaysSectored", "HysteresisPolicy", "PathDecision",
-    "SectorPolicy",
+    "AdaptiveSectorPolicy", "AlwaysDense", "AlwaysSectored",
+    "HysteresisPolicy", "PathDecision", "SectorPolicy",
     "FifoScheduler", "OverlapScheduler", "Scheduler",
     "PrefillGroup", "Request", "ServeSession", "StreamHandle",
     "make_session", "state_signature", "stacked_row_signature",

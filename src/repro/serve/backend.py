@@ -27,6 +27,14 @@ class DecodeBackend(Protocol):
     takes ``(B, S)`` prompt tokens and returns ``(logits, state)``. States
     are arbitrary pytrees — the session stacks them along a fresh leading
     slot axis without knowing their internal layout.
+
+    Two *optional* attributes extend the protocol (discovered via
+    ``getattr``, never required): ``meter`` — a
+    :class:`~repro.telemetry.meters.WaveMeter` the session drives around
+    each wave (:class:`~repro.telemetry.meters.MeteredBackend` is the
+    decorator that adds one to any backend) — and ``k_for(topk_frac)``,
+    the concrete page budget a policy fraction resolves to, which the
+    meter charges fetch energy for.
     """
 
     prefill_fn: Callable

@@ -26,6 +26,15 @@ slot's sector predictions CAN depend on which same-prefix slots are
 co-resident, so the guarantee there is only trace-level: both schedulers
 admit at the first step boundary with a free slot, and the sectored
 equivalence test covers that case empirically.
+
+Schedulers are **meter-transparent**: the telemetry hooks (see
+``repro.telemetry``) live in the session's prefill/wave methods, which
+both shipped schedulers drive through the same entry points, and wave
+energy is computed from deterministic host-side counters — never
+wall-clock — so fifo and overlap report *identical joules* for identical
+token streams (asserted in tests/test_telemetry.py). A custom scheduler
+keeps this property for free as long as it admits via ``prefill_one`` /
+``prefill_group`` + ``install*`` rather than mutating slots directly.
 """
 
 from __future__ import annotations

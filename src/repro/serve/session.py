@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Iterator
 
 import jax
@@ -145,6 +146,21 @@ class StreamHandle:
             pass
         return self.peek()
 
+    # -- telemetry (populated only when the session's backend is metered) --
+
+    @property
+    def telemetry(self) -> dict | None:
+        """This request's metered stats (``energy_j``, ``tokens``,
+        ``pages_fetched``, ...) or None on an unmetered session."""
+        meter = self._session.meter
+        return None if meter is None else meter.request_stats(self.rid)
+
+    @property
+    def energy_j(self) -> float | None:
+        """DRAM joules attributed to this request (None when unmetered)."""
+        stats = self.telemetry
+        return None if stats is None else stats["energy_j"]
+
 
 class ServeSession:
     """Facade over backend + scheduler + policy; owns slots and waves."""
@@ -158,6 +174,10 @@ class ServeSession:
         self.scheduler = scheduler if scheduler is not None else FifoScheduler()
         self.policy = policy if policy is not None else HysteresisPolicy()
         self.vectorized = vectorized
+        # metering is discovered, not configured: a MeteredBackend carries a
+        # WaveMeter; a plain backend has none and every telemetry branch
+        # below reduces to one `is None` check (zero-cost when off)
+        self.meter = getattr(backend, "meter", None)
         self.queue: collections.deque[StreamHandle] = collections.deque()
         self.slots: list[StreamHandle | None] = [None] * max_batch
         self.completion_order: list[int] = []
@@ -218,6 +238,9 @@ class ServeSession:
         """Blocking single-prompt prefill; returns (first_token, state)."""
         logits, state = self.backend.prefill_fn(handle.request.prompt[None, :])
         self.stats["prefill_calls"] += 1
+        if self.meter is not None:
+            self.meter.record_prefill(handle.rid, len(handle.request.prompt),
+                                      overlapped=self.wave_in_flight)
         return int(np.argmax(np.asarray(logits[0]))), state
 
     def prefill_group(self, handles: list[StreamHandle]) -> PrefillGroup:
@@ -246,6 +269,10 @@ class ServeSession:
             prompts = jnp.asarray(
                 np.stack([h.request.prompt for h in handles]), jnp.int32)
             logits, stacked = self._vmapped_prefill(prompts)
+        if self.meter is not None:
+            for h in handles:
+                self.meter.record_prefill(h.rid, len(h.request.prompt),
+                                          overlapped=self.wave_in_flight)
         return PrefillGroup(list(handles), logits, stacked,
                             stacked_row_signature(stacked))
 
@@ -418,6 +445,7 @@ class ServeSession:
         self.stats["waves"] += 1
         if use_sectored:
             self.stats["sectored_waves"] += 1
+        t0 = time.perf_counter() if self.meter is not None else 0.0
         if self.vectorized:
             # dispatch the wave (async), let the scheduler overlap prefill
             # work with it, then block on the results
@@ -429,12 +457,66 @@ class ServeSession:
                 self.wave_in_flight = False
             next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(
                 self.max_batch, -1)[:, 0]
-            produced = self._emit_wave(active, next_tok, use_sectored)
         else:
             next_tok = self._run_looped(active, fn)
             self.scheduler.overlap(self)
-            produced = self._emit_wave(active, next_tok, use_sectored)
+        # wall_s is snapped first so it brackets just dispatch + device
+        # drain + overlap — not the telemetry table pull below or the emit
+        # bookkeeping; wave info is captured before _emit_wave (finished
+        # slots vacate) and the meter is driven after it
+        wall_s = time.perf_counter() - t0 if self.meter is not None else 0.0
+        wave_info = (self._meter_wave_info(active, decision, use_sectored)
+                     if self.meter is not None else None)
+        produced = self._emit_wave(active, next_tok, use_sectored)
+        if wave_info is not None:
+            self.meter.record_wave(wall_s=wall_s, **wave_info)
         return produced
+
+    def _meter_wave_info(self, active: list[int], decision,
+                         use_sectored: bool) -> dict:
+        """Host-side wave descriptor for WaveMeter.record_wave.
+
+        Positions are derived from counts the session already tracks
+        (prompt length + emitted tokens), never read back from the device:
+        at attend time a slot's cache length is ``len(prompt) +
+        len(tokens) - 1`` (the prefill token is emitted before the first
+        wave). Deterministic counters keep fifo/overlap energy identical
+        for identical token streams.
+        """
+        k_for = getattr(self.backend, "k_for", None)
+        k_pages = (k_for(decision.topk_frac)
+                   if use_sectored and k_for is not None else None)
+        slots = [(s, self.slots[s].rid,
+                  len(self.slots[s].request.prompt)
+                  + len(self.slots[s]._tokens) - 1)
+                 for s in active]
+        views = (self._meter_state_views(active)
+                 if use_sectored and k_pages is not None else None)
+        return dict(sectored=use_sectored, k_pages=k_pages, slots=slots,
+                    state_views=views)
+
+    def _meter_state_views(self, active: list[int]) -> dict | None:
+        """Per-slot (table, position) numpy views for the attention-mass
+        estimate — duck-typed on the state exposing a predictor ``table``
+        (SectoredState does); any other state pytree yields None. The
+        device pull happens after the wave's results were already drained
+        for tokens, so it adds a copy, not a sync."""
+        if self.vectorized:
+            table = getattr(self.batched, "table", None)
+            position = getattr(self.batched, "position", None)
+            if table is None or getattr(table, "ndim", 0) < 3:
+                return None
+            table = np.asarray(table)
+            position = np.asarray(position)
+            return {s: (table[s], position[s]) for s in active}
+        views = {}
+        for s in active:
+            state = self.states[s]
+            table = getattr(state, "table", None)
+            if table is None or getattr(table, "ndim", 0) < 3:
+                return None
+            views[s] = (np.asarray(table), np.asarray(state.position))
+        return views
 
     def _launch_vectorized(self, active: list[int], fn):
         tokens = np.zeros((self.max_batch, 1, 1), np.int32)

@@ -1,0 +1,25 @@
+"""Telemetry: per-wave DRAM energy accounting for the serving stack.
+
+The paper's headline result is *energy* — up to 33% DRAM energy saved by
+fetching only the sectors a workload touches (§7.1, Fig. 9). This package
+meters the serving stack against the calibrated power model the repo
+already reproduces (``core/power.py``) and closes the control loop:
+
+* :mod:`repro.telemetry.meters` — :class:`WaveMeter` (per-wave counters ->
+  joules, per-request attribution) and :class:`MeteredBackend` (the opt-in
+  decorator a ``ServeSession`` discovers metering through).
+* :mod:`repro.telemetry.recorder` — :class:`TraceRecorder`, the ring-
+  buffered per-wave trace with EMA coverage aggregates that
+  :class:`~repro.serve.policy.AdaptiveSectorPolicy` consumes, plus JSONL
+  export for ``benchmarks/``.
+
+See ``docs/serving.md`` ("Telemetry & energy accounting") for the meter
+fields and the Fig. 9 anchoring of each joule formula.
+"""
+
+from repro.telemetry.meters import (KVGeometry, MeteredBackend, WaveMeter,
+                                    attn_mass_captured)
+from repro.telemetry.recorder import TraceRecorder
+
+__all__ = ["KVGeometry", "MeteredBackend", "WaveMeter", "TraceRecorder",
+           "attn_mass_captured"]

@@ -1,0 +1,370 @@
+"""WaveMeter: per-wave DRAM energy accounting for the serving stack.
+
+Maps the serving runtime's KV traffic onto the paper's calibrated power
+model (``core/power.py``, Fig. 9 anchors): KV *pages* play the paper's
+*sectors*, a row holds ``NUM_SECTORS`` consecutive pages, and each decode
+wave is charged
+
+* **ACT** — one sectored row activation per touched row, enabling only the
+  fetched sectors (``power.kv_fetch_energy``: the fixed periphery share is
+  paid per activation, the per-sector array share scales — the 12.7% vs
+  66.5% split of Fig. 9);
+* **RD** — full-burst block reads for the pages actually moved (the
+  channel-byte reduction of Fig. 14; the newest page moves only its
+  written fraction — the VBL shortened burst);
+* **WR** — the one-token KV append, identical on every path.
+
+Everything is computed from *host-side counters* (slot positions the
+session already tracks, the policy's requested page budget) — never from
+wall-clock or device timings — so two schedulers that produce the same
+token stream report bit-identical joules. Wall-clock is recorded per wave
+for throughput reporting but is deliberately excluded from energy.
+
+Metering attaches via :class:`MeteredBackend`, a decorator over any
+``DecodeBackend``. The session discovers the meter through the backend's
+``meter`` attribute; a plain backend has none and the metering branches
+cost one ``is None`` check per step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core import power
+from repro.telemetry.recorder import TraceRecorder
+
+
+@dataclasses.dataclass(frozen=True)
+class KVGeometry:
+    """Static KV-cache layout the meter converts counters with.
+
+    ``page_kv_bytes`` is the K+V footprint of ONE page in ONE layer across
+    all kv heads — per-wave traffic scales by ``n_layers`` because every
+    layer re-fetches its own cache.
+    """
+
+    page_size: int  # tokens per KV page (one sector)
+    total_pages: int  # page capacity of the padded cache
+    page_kv_bytes: float  # K+V bytes per page per layer (all kv heads)
+    n_layers: int
+
+    @property
+    def token_kv_bytes(self) -> float:
+        """K+V bytes one token appends per layer."""
+        return self.page_kv_bytes / self.page_size
+
+    @classmethod
+    def from_model_cfg(cls, cfg, *, seq_len: int, page_size: int,
+                       kv_dtype_bytes: int = 2,
+                       total_pages: int | None = None) -> "KVGeometry":
+        """Geometry for a model config (bf16 KV cache by default).
+
+        ``total_pages`` overrides the plain ``ceil(seq_len / page_size)``
+        for backends with a padded page capacity (SectoredKVBackend passes
+        its own) — the K+V byte formula stays in this one place.
+        """
+        page_kv_bytes = (page_size * cfg.n_kv_heads * cfg.head_dim_
+                         * 2 * kv_dtype_bytes)
+        if total_pages is None:
+            total_pages = max(math.ceil(seq_len / page_size), 1)
+        return cls(page_size=page_size, total_pages=total_pages,
+                   page_kv_bytes=float(page_kv_bytes),
+                   n_layers=cfg.n_layers)
+
+
+def attn_mass_captured(table: np.ndarray, position: int, page_size: int,
+                       k: int) -> float:
+    """Predictor-side estimate of the attention mass the top-k covers.
+
+    ``table`` is one slot's sector-history table ``(L, Hkv, P)`` (EMA of
+    observed per-page attention mass). The selection mirrors
+    ``sector_predictor.predict_topk``: the newest page always wins a slot
+    (recency bonus), the remaining ``k - 1`` go to the highest scores.
+
+    This is the predictor's *own* estimate, biased high under a narrow
+    selection — like the paper's SHT, the table only observes mass on the
+    sectors that were fetched, so unfetched pages decay regardless of their
+    true usefulness. Honest immediately after an exact-mode (all-pages)
+    phase such as prefill; treat long-sectored-run values as an upper
+    bound.
+    """
+    L, H, P = table.shape
+    cur = min(position // page_size, P - 1)
+    n_valid = cur + 1
+    k = min(int(k), n_valid)
+    if k >= n_valid:
+        return 1.0
+    valid = table[..., :n_valid].astype(np.float64)  # (L, H, n_valid)
+    total = valid.sum(axis=-1)
+    captured = valid[..., cur].copy()
+    if k > 1:
+        others = np.delete(valid, cur, axis=-1)
+        others = np.sort(others, axis=-1)[..., ::-1]
+        captured += others[..., :k - 1].sum(axis=-1)
+    share = np.where(total > 1e-12, captured / np.maximum(total, 1e-12), 1.0)
+    return float(np.mean(share))
+
+
+def _zero_totals() -> dict[str, float]:
+    return dict(waves=0, sectored_waves=0, dense_waves=0, tokens=0,
+                prefill_events=0, prefill_tokens=0, overlapped_prefills=0,
+                pages_fetched=0.0, pages_valid=0.0, acts=0, sectors=0.0,
+                act_j=0.0, rd_j=0.0, wr_j=0.0, prefill_j=0.0, wall_s=0.0,
+                demand_merges=0)
+
+
+class WaveMeter:
+    """Accumulates per-wave counters and converts them to joules.
+
+    ``record_wave`` / ``record_prefill`` are driven by ``ServeSession``;
+    per-request attribution lands in :attr:`per_request` and surfaces
+    through ``StreamHandle.telemetry`` / ``StreamHandle.energy_j``.
+    """
+
+    def __init__(self, geometry: KVGeometry, *,
+                 recorder: TraceRecorder | None = None,
+                 energy_model: power.DRAMEnergyModel | None = None,
+                 sectored_hw: bool = True):
+        if geometry is None:
+            raise ValueError(
+                "WaveMeter needs a KVGeometry: pass one explicitly or meter "
+                "a backend exposing kv_geometry() (SectoredKVBackend does)")
+        self.geometry = geometry
+        self.recorder = recorder if recorder is not None else TraceRecorder()
+        self.model = energy_model if energy_model is not None else power.DEFAULT_ENERGY
+        # deployment property: False models the coarse-grained DRAM baseline
+        # (full-row ACTs, every valid page moved, no sector-logic overhead)
+        self.sectored_hw = sectored_hw
+        self.totals = _zero_totals()
+        self.per_request: dict[int, dict[str, float]] = {}
+
+    # -- per-request attribution ------------------------------------------
+
+    def _req(self, rid: int) -> dict[str, float]:
+        return self.per_request.setdefault(
+            rid, dict(energy_j=0.0, tokens=0, prefill_tokens=0,
+                      pages_fetched=0.0, pages_valid=0.0))
+
+    def request_stats(self, rid: int) -> dict[str, float] | None:
+        stats = self.per_request.get(rid)
+        return None if stats is None else dict(stats)
+
+    # -- recording hooks ---------------------------------------------------
+
+    def record_prefill(self, rid: int, prompt_len: int, *,
+                       overlapped: bool = False) -> None:
+        """One request's prefill: S token appends + ONE exact-mode read
+        pass over the final cache (prefill is single-pass in a production
+        backend; our per-token reference loop is an implementation detail
+        the energy model must not charge quadratically)."""
+        g = self.geometry
+        valid_units = prompt_len / g.page_size
+        fetch = power.kv_fetch_energy(valid_units, valid_units,
+                                      page_bytes=g.page_kv_bytes,
+                                      sectored_hw=self.sectored_hw,
+                                      model=self.model)
+        joules = g.n_layers * (
+            fetch["act_j"] + fetch["rd_j"]
+            + prompt_len * power.kv_append_energy(g.token_kv_bytes,
+                                                  model=self.model))
+        self.totals["prefill_events"] += 1
+        self.totals["prefill_tokens"] += prompt_len
+        self.totals["prefill_j"] += joules
+        self.totals["tokens"] += 1  # the prefill-emitted first token
+        if overlapped:
+            self.totals["overlapped_prefills"] += 1
+        req = self._req(rid)
+        req["energy_j"] += joules
+        req["prefill_tokens"] = prompt_len
+        req["tokens"] += 1
+
+    def record_wave(self, *, sectored: bool, k_pages: int | None,
+                    slots: list[tuple[int, int, int]], wall_s: float = 0.0,
+                    state_views: Mapping[int, tuple] | None = None) -> None:
+        """One decode wave.
+
+        ``slots`` is ``[(slot, rid, position), ...]`` for the active slots,
+        with ``position`` the cache length at attend time (tracked
+        host-side by the session — no device read). ``state_views``
+        optionally maps slot -> ``(table, position)`` numpy views for the
+        attention-mass estimate.
+        """
+        g = self.geometry
+        wave = dict(act_j=0.0, rd_j=0.0, wr_j=0.0, fetched=0.0, valid=0.0,
+                    acts=0, sectors=0.0)
+        masses = []
+        for slot, rid, position in slots:
+            valid_pages = min(position // g.page_size + 1, g.total_pages)
+            partial = (position % g.page_size + 1) / g.page_size
+            valid_units = (valid_pages - 1) + partial
+            if sectored and k_pages is not None and self.sectored_hw:
+                k_slot = min(int(k_pages), valid_pages)
+                # the newest (partial) page is always selected (recency
+                # bonus), so it contributes its written fraction only
+                fetched_units = (k_slot - 1) + partial
+            else:
+                # dense wave — or coarse-grained hardware, which moves
+                # every valid page no matter what the policy asked for
+                k_slot = valid_pages
+                fetched_units = valid_units
+            fetch = power.kv_fetch_energy(fetched_units, valid_units,
+                                          page_bytes=g.page_kv_bytes,
+                                          sectored_hw=self.sectored_hw,
+                                          model=self.model)
+            act_j = g.n_layers * fetch["act_j"]
+            rd_j = g.n_layers * fetch["rd_j"]
+            wr_j = g.n_layers * power.kv_append_energy(g.token_kv_bytes,
+                                                       model=self.model)
+            wave["act_j"] += act_j
+            wave["rd_j"] += rd_j
+            wave["wr_j"] += wr_j
+            wave["fetched"] += fetched_units
+            wave["valid"] += valid_units
+            wave["acts"] += g.n_layers * fetch["acts"]
+            wave["sectors"] += g.n_layers * fetch["sectors"]
+            req = self._req(rid)
+            req["energy_j"] += act_j + rd_j + wr_j
+            req["tokens"] += 1
+            req["pages_fetched"] += fetched_units
+            req["pages_valid"] += valid_units
+            if (sectored and k_pages is not None and state_views is not None
+                    and slot in state_views):
+                table, _ = state_views[slot]
+                table = np.asarray(table)
+                if table.ndim == 4:  # (L, B=1, Hkv, P) -> (L, Hkv, P)
+                    table = table[:, 0]
+                if table.ndim == 3 and table.shape[-1] >= 1:
+                    masses.append(attn_mass_captured(
+                        table, position, g.page_size, k_pages))
+
+        t = self.totals
+        t["waves"] += 1
+        t["sectored_waves" if sectored else "dense_waves"] += 1
+        t["tokens"] += len(slots)
+        t["pages_fetched"] += wave["fetched"]
+        t["pages_valid"] += wave["valid"]
+        t["acts"] += wave["acts"]
+        t["sectors"] += wave["sectors"]
+        t["act_j"] += wave["act_j"]
+        t["rd_j"] += wave["rd_j"]
+        t["wr_j"] += wave["wr_j"]
+        t["wall_s"] += wall_s
+
+        record = dict(
+            path="sectored" if sectored else "dense",
+            k_pages=k_pages if sectored else None,
+            slots=len(slots), tokens=len(slots),
+            pages_fetched=round(wave["fetched"], 6),
+            pages_valid=round(wave["valid"], 6),
+            acts=wave["acts"],
+            act_j=wave["act_j"], rd_j=wave["rd_j"], wr_j=wave["wr_j"],
+            energy_j=wave["act_j"] + wave["rd_j"] + wave["wr_j"],
+            wall_s=wall_s,
+            sector_coverage=(wave["fetched"] / wave["valid"]
+                             if wave["valid"] > 0 else 1.0),
+        )
+        if masses:
+            record["attn_mass"] = float(np.mean(masses))
+        self.recorder.append(record)
+
+    # -- aggregate views ---------------------------------------------------
+
+    @property
+    def decode_j(self) -> float:
+        """Deterministic decode-path DRAM energy (ACT + RD + WR)."""
+        t = self.totals
+        return t["act_j"] + t["rd_j"] + t["wr_j"]
+
+    @property
+    def energy_j(self) -> float:
+        """Total deterministic DRAM energy including prefill."""
+        return self.decode_j + self.totals["prefill_j"]
+
+    def report(self) -> dict[str, Any]:
+        """Flat summary for end-of-run tables and BENCH_*.json payloads."""
+        t = dict(self.totals)
+        fetched, valid = t["pages_fetched"], t["pages_valid"]
+        return dict(
+            **t,
+            decode_j=self.decode_j,
+            energy_j=self.energy_j,
+            sector_coverage=fetched / valid if valid > 0 else 1.0,
+            ema=dict(self.recorder.ema),
+        )
+
+
+class MeteredBackend:
+    """Opt-in metering decorator over any ``DecodeBackend``.
+
+    Delegates every data-path callable *by identity* — the session's wave
+    cache keys on ``id(fn)``, and ``jit``/``vmap`` would execute a Python
+    wrapper's side effects exactly once, at trace time, so the traced
+    callables cannot carry counters. All metering therefore happens on the
+    host control plane: the session discovers the meter via this object's
+    ``meter`` attribute and drives ``record_prefill`` / ``record_wave``
+    around each wave, and ``merge_demands`` (a per-wave Python call) is
+    counted here. Wrapping costs nothing when unused: a session over a
+    plain backend finds no ``meter`` attribute and skips every hook.
+    """
+
+    def __init__(self, inner, *, meter: WaveMeter | None = None,
+                 recorder: TraceRecorder | None = None,
+                 geometry: KVGeometry | None = None,
+                 energy_model: power.DRAMEnergyModel | None = None,
+                 sectored_hw: bool = True):
+        self.inner = inner
+        if meter is None:
+            if geometry is None:
+                geom_fn = getattr(inner, "kv_geometry", None)
+                if geom_fn is None:
+                    raise ValueError(
+                        f"{type(inner).__name__} exposes no kv_geometry(); "
+                        f"pass geometry=KVGeometry(...) explicitly")
+                geometry = geom_fn()
+            meter = WaveMeter(geometry, recorder=recorder,
+                              energy_model=energy_model,
+                              sectored_hw=sectored_hw)
+        self.meter = meter
+
+    # data path: identity-stable delegation ---------------------------------
+
+    @property
+    def prefill_fn(self):
+        return self.inner.prefill_fn
+
+    @property
+    def decode_fn(self):
+        return self.inner.decode_fn
+
+    @property
+    def sectored_fn(self):
+        return self.inner.sectored_fn
+
+    @property
+    def demand_merge_fn(self):
+        return self.inner.demand_merge_fn
+
+    @property
+    def supports_sectored(self) -> bool:
+        return self.inner.supports_sectored
+
+    def sectored_fn_for(self, topk_frac: float | None):
+        return self.inner.sectored_fn_for(topk_frac)
+
+    def merge_demands(self, stacked_state: Any, group_ids: Any) -> Any:
+        self.meter.totals["demand_merges"] += 1
+        return self.inner.merge_demands(stacked_state, group_ids)
+
+    def k_for(self, topk_frac: float | None = None) -> int | None:
+        """The page budget the policy's fraction resolves to, when the
+        inner backend can say (``SectoredKVBackend.k_for``); None keeps the
+        meter in full-fetch accounting."""
+        inner_k = getattr(self.inner, "k_for", None)
+        return None if inner_k is None else inner_k(topk_frac)
+
+    def __repr__(self) -> str:
+        return f"MeteredBackend({self.inner!r})"

@@ -1,0 +1,113 @@
+"""TraceRecorder: ring-buffered per-wave telemetry with windowed aggregates.
+
+One record per decode wave (appended by :class:`~repro.telemetry.meters.
+WaveMeter`), held in a bounded ring buffer so long-running sessions meter at
+O(1) memory. Two consumers:
+
+* **Control** — :class:`~repro.serve.policy.AdaptiveSectorPolicy` reads the
+  exponentially-weighted aggregates in :attr:`TraceRecorder.ema` (sector
+  coverage, predictor attention-mass capture) to widen or narrow the top-k
+  fetch fraction; the EMA is the recorder-side analogue of the predictor's
+  own sector-history decay.
+* **Reporting** — ``benchmarks/serve_energy.py`` and ``launch/serve.py
+  --telemetry`` export the raw window as JSONL for offline analysis.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import pathlib
+from typing import Any, Iterable, Mapping
+
+#: record fields folded into the running EMAs (others are kept raw-only)
+EMA_FIELDS = ("sector_coverage", "attn_mass", "energy_j", "k_pages")
+DEFAULT_EMA_ALPHA = 0.25
+
+
+class TraceRecorder:
+    """Bounded per-wave trace + online exponentially-weighted aggregates.
+
+    ``append()`` takes one flat mapping per wave. Numeric fields listed in
+    :data:`EMA_FIELDS` update ``self.ema[field]`` as
+    ``(1 - alpha) * old + alpha * new`` (seeded with the first observation);
+    fields absent from a record — e.g. ``attn_mass`` on a dense wave —
+    leave their EMA untouched, so a burst of dense waves does not erase the
+    sectored-path coverage signal.
+    """
+
+    def __init__(self, capacity: int = 1024,
+                 ema_alpha: float = DEFAULT_EMA_ALPHA):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if not 0.0 < ema_alpha <= 1.0:
+            raise ValueError(f"ema_alpha must be in (0, 1], got {ema_alpha}")
+        self.capacity = capacity
+        self.ema_alpha = ema_alpha
+        self._buf: collections.deque[dict[str, Any]] = collections.deque(
+            maxlen=capacity)
+        self._appended = 0
+        self.ema: dict[str, float] = {}
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    @property
+    def total_appended(self) -> int:
+        """Records ever appended (>= len() once the ring has wrapped)."""
+        return self._appended
+
+    def append(self, record: Mapping[str, Any]) -> None:
+        rec = dict(record)
+        rec.setdefault("seq", self._appended)
+        self._buf.append(rec)
+        self._appended += 1
+        for field in EMA_FIELDS:
+            value = rec.get(field)
+            if value is None:
+                continue
+            value = float(value)
+            prev = self.ema.get(field)
+            self.ema[field] = (value if prev is None else
+                               (1.0 - self.ema_alpha) * prev
+                               + self.ema_alpha * value)
+
+    def window(self, n: int | None = None) -> list[dict[str, Any]]:
+        """The last ``n`` records (all buffered records when ``n`` is None)."""
+        if n is None or n >= len(self._buf):
+            return list(self._buf)
+        return list(self._buf)[len(self._buf) - n:]
+
+    def mean(self, field: str, n: int | None = None) -> float | None:
+        """Window mean of a numeric field (records missing it are skipped)."""
+        values = [float(r[field]) for r in self.window(n)
+                  if r.get(field) is not None]
+        if not values:
+            return None
+        return sum(values) / len(values)
+
+    def to_jsonl(self, path, extra: Mapping[str, Any] | None = None):
+        """Write the buffered window as JSON Lines; returns the path.
+
+        ``extra`` fields are merged into every line (run metadata such as
+        arch / scheduler / policy), keeping each line self-describing for
+        downstream concatenation across runs.
+        """
+        path = pathlib.Path(path)
+        base = dict(extra or {})
+        with path.open("w") as fh:
+            for rec in self._buf:
+                fh.write(json.dumps({**base, **rec}) + "\n")
+        return path
+
+    @staticmethod
+    def summarize(records: Iterable[Mapping[str, Any]]) -> dict[str, float]:
+        """Sums of the additive fields over an iterable of records."""
+        totals: dict[str, float] = collections.defaultdict(float)
+        for rec in records:
+            for key in ("energy_j", "act_j", "rd_j", "wr_j", "tokens",
+                        "pages_fetched", "pages_valid", "acts", "wall_s"):
+                value = rec.get(key)
+                if value is not None:
+                    totals[key] += float(value)
+        return dict(totals)

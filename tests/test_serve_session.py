@@ -311,6 +311,70 @@ def test_engine_select_path_matches_policy_edges():
     assert eng._select_path() is False
 
 
+def test_hysteresis_policy_stats_passthrough():
+    """The session hands its live stats mapping to every decide() call —
+    a policy can steer on decode_steps/sectored_waves without extra
+    plumbing (AdaptiveSectorPolicy's recorder rides next to this)."""
+
+    class SpyHysteresis(HysteresisPolicy):
+        def decide(self, occupancy, stats):
+            self.seen_stats = stats
+            return super().decide(occupancy, stats)
+
+    policy = SpyHysteresis(min_occupancy=0.5)
+    sess = ServeSession(_fake_backend(), max_batch=2, policy=policy)
+    for rid in range(3):
+        sess.submit(Request(rid, np.arange(4, dtype=np.int32),
+                            max_new_tokens=3))
+    sess.run_until_drained()
+    assert policy.seen_stats is sess.stats  # the live dict, not a copy
+    assert policy.seen_stats["decode_steps"] > 0
+    # and the base policy treats stats as read-only context
+    before = dict(sess.stats)
+    HysteresisPolicy().decide(1.0, sess.stats)
+    assert sess.stats == before
+
+
+def test_path_decision_merge_demands_false_reaches_backend_unmerged():
+    """A policy can disable the shared-prefix OR-merge per wave:
+    merge_demands=False must keep the backend's merge hook un-invoked
+    even for same-prefix co-resident requests."""
+
+    class CountingBackend(ServingBackend):
+        merge_calls = 0
+
+        def merge_demands(self, stacked_state, group_ids):
+            self.merge_calls += 1
+            return super().merge_demands(stacked_state, group_ids)
+
+    class FixedPolicy:
+        def __init__(self, merge):
+            self.merge = merge
+
+        def decide(self, occupancy, stats):
+            return PathDecision(use_sectored=True, merge_demands=self.merge)
+
+    def run(policy):
+        fake = _fake_backend()
+        backend = CountingBackend(fake.prefill_fn, fake.decode_fn,
+                                  fake.decode_fn,
+                                  demand_merge_fn=lambda s, g: s)
+        sess = ServeSession(backend, max_batch=2, policy=policy)
+        shared = np.arange(4, dtype=np.int32)
+        for rid in range(2):  # identical prompts: same prefix group
+            sess.submit(Request(rid, shared.copy(), max_new_tokens=3))
+        stats = sess.run_until_drained()
+        return backend, stats
+
+    backend, stats = run(FixedPolicy(merge=False))
+    assert backend.merge_calls == 0
+    assert stats["merged_slots"] == 0
+    # control: the default decision (merge_demands=True) does merge
+    backend_on, stats_on = run(FixedPolicy(merge=True))
+    assert backend_on.merge_calls > 0
+    assert stats_on["merged_slots"] > 0
+
+
 def test_path_decision_topk_frac_respecialises_backend(setup):
     """A PathDecision topk_frac hint gets a per-k jitted sectored step;
     None means the backend default, and variants are cached."""

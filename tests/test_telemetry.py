@@ -1,0 +1,388 @@
+"""Telemetry subsystem: per-wave energy accounting (WaveMeter /
+MeteredBackend), the TraceRecorder ring buffer, the coverage-driven
+AdaptiveSectorPolicy, and the scheduler-independence of metered energy
+(fifo == overlap joules for identical token streams)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import metrics, power
+from repro.models import model
+from repro.runtime import sectored_decode
+from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
+                         FifoScheduler, OverlapScheduler, PathDecision,
+                         Request, ServeSession, ServingBackend)
+from repro.telemetry import (KVGeometry, MeteredBackend, TraceRecorder,
+                             WaveMeter, attn_mass_captured)
+
+VOCAB = 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get("yi-6b").reduced(n_layers=2, d_model=64, n_heads=4,
+                                       n_kv_heads=2, d_ff=128, vocab=128,
+                                       head_dim=32)
+    params = model.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _fake_backend(sectored=True):
+    """Deterministic toy backend (see test_serve_session) for fast,
+    model-free metering tests."""
+
+    def prefill_fn(tokens):
+        B, S = tokens.shape
+        kv = jnp.broadcast_to(
+            jnp.sum(tokens, axis=1, keepdims=True).astype(jnp.float32),
+            (B, 8)) * 1.0
+        logits = jax.nn.one_hot(jnp.sum(tokens, axis=1) % VOCAB, VOCAB)
+        return logits, dict(kv=kv, pos=jnp.zeros((B,), jnp.int32))
+
+    def decode_fn(state, token):
+        logits = jax.nn.one_hot((token[:, 0] + 1) % VOCAB, VOCAB)
+        return logits, dict(kv=state["kv"], pos=state["pos"] + 1)
+
+    return ServingBackend(prefill_fn, decode_fn,
+                          decode_fn if sectored else None)
+
+
+GEOM = KVGeometry(page_size=4, total_pages=8, page_kv_bytes=512.0, n_layers=2)
+
+
+def _reqs(cfg, n, max_new_tokens, seed=0, size=6):
+    rng = np.random.default_rng(seed)
+    return [Request(rid, rng.integers(0, cfg.vocab, size=size).astype(np.int32),
+                    max_new_tokens=max_new_tokens) for rid in range(n)]
+
+
+# -- power model: KV fetch mapping -------------------------------------------
+
+
+def test_kv_fetch_energy_monotone_and_bounded_by_coarse():
+    """Fetch energy grows with pages fetched, and the sectored exact fetch
+    (all valid pages) never exceeds the coarse-grained baseline, which pays
+    full-row activations (Fig. 9: periphery is per-activation)."""
+    for valid in (1.0, 3.0, 5.5, 12.0):
+        coarse = power.kv_fetch_energy(valid, valid, page_bytes=2048,
+                                       sectored_hw=False)
+        coarse_j = coarse["act_j"] + coarse["rd_j"]
+        prev = -1.0
+        for fetched in np.arange(0.5, valid + 0.5, 0.5):
+            e = power.kv_fetch_energy(float(fetched), valid, page_bytes=2048)
+            total = e["act_j"] + e["rd_j"]
+            assert total > 0.0
+            assert total >= prev
+            assert total <= coarse_j
+            prev = total
+
+
+def test_kv_fetch_energy_empty_and_append():
+    zero = power.kv_fetch_energy(0.0, 0.0, page_bytes=2048)
+    assert zero["act_j"] == zero["rd_j"] == 0.0
+    assert power.kv_fetch_energy(0.0, 4.0, page_bytes=2048)["act_j"] == 0.0
+    assert power.kv_append_energy(64.0) > 0.0
+
+
+# -- metrics satellite --------------------------------------------------------
+
+
+def test_energy_per_token_guards_zero_tokens():
+    assert metrics.dram_energy_per_token(1.5, 0) == 0.0
+    assert metrics.dram_energy_per_token(1.5, 3) == pytest.approx(0.5)
+    # token-weighted aggregate, not mean-of-ratios
+    assert metrics.aggregate_energy_per_token([1.0, 3.0], [1, 3]) == \
+        pytest.approx(1.0)
+    assert metrics.aggregate_energy_per_token([], []) == 0.0
+    with pytest.raises(ValueError, match="mismatched"):
+        metrics.aggregate_energy_per_token([1.0], [1, 2])
+
+
+# -- TraceRecorder ------------------------------------------------------------
+
+
+def test_recorder_ring_buffer_and_ema(tmp_path):
+    rec = TraceRecorder(capacity=4, ema_alpha=0.5)
+    for i in range(6):
+        rec.append(dict(sector_coverage=float(i % 2), energy_j=1.0))
+    assert len(rec) == 4  # wrapped
+    assert rec.total_appended == 6
+    assert [r["seq"] for r in rec.window()] == [2, 3, 4, 5]
+    assert len(rec.window(2)) == 2
+    # EMA saw all six appends even though the ring holds four
+    assert 0.0 < rec.ema["sector_coverage"] < 1.0
+    assert rec.ema["energy_j"] == pytest.approx(1.0)
+    # a record missing a field leaves that EMA untouched
+    before = rec.ema["sector_coverage"]
+    rec.append(dict(energy_j=2.0))
+    assert rec.ema["sector_coverage"] == before
+    assert rec.mean("energy_j", 2) == pytest.approx(1.5)
+
+    path = rec.to_jsonl(tmp_path / "trace.jsonl", extra=dict(arch="t"))
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(lines) == len(rec)
+    assert all(line["arch"] == "t" for line in lines)
+
+    with pytest.raises(ValueError, match="capacity"):
+        TraceRecorder(capacity=0)
+    with pytest.raises(ValueError, match="ema_alpha"):
+        TraceRecorder(ema_alpha=0.0)
+
+
+# -- WaveMeter ----------------------------------------------------------------
+
+
+def test_wave_meter_accounting_and_attribution():
+    meter = WaveMeter(GEOM)
+    meter.record_prefill(0, 12)
+    meter.record_prefill(1, 12)
+    prefill_j = meter.totals["prefill_j"]
+    assert prefill_j > 0.0
+    # two sectored waves at k=1 of 4 valid pages (position 12 -> page 3)
+    for _ in range(2):
+        meter.record_wave(sectored=True, k_pages=1,
+                          slots=[(0, 0, 12), (1, 1, 12)], wall_s=0.5)
+    narrow_j = meter.decode_j
+    assert meter.totals["waves"] == 2
+    assert meter.totals["sectored_waves"] == 2
+    assert meter.totals["tokens"] == 2 + 4  # 2 prefill tokens + 4 wave tokens
+    assert meter.totals["wall_s"] == pytest.approx(1.0)
+    # per-request attribution sums to the meter totals
+    per_req = sum(meter.per_request[rid]["energy_j"] for rid in (0, 1))
+    assert per_req == pytest.approx(meter.energy_j)
+    assert meter.per_request[0]["energy_j"] == \
+        pytest.approx(meter.per_request[1]["energy_j"])
+    # a dense wave over the same slots costs strictly more
+    dense = WaveMeter(GEOM)
+    for _ in range(2):
+        dense.record_wave(sectored=False, k_pages=None,
+                          slots=[(0, 0, 12), (1, 1, 12)])
+    assert dense.decode_j > narrow_j
+    cov = meter.recorder.ema["sector_coverage"]
+    assert 0.0 < cov < dense.recorder.ema["sector_coverage"] == 1.0
+
+
+def test_wave_meter_coarse_hw_charges_full_fetch():
+    """sectored_hw=False models the baseline DRAM: the sectored flag on a
+    wave cannot reduce its energy (every valid page moves, full-row ACTs)."""
+    coarse = WaveMeter(GEOM, sectored_hw=False)
+    coarse.record_wave(sectored=True, k_pages=1, slots=[(0, 0, 12)])
+    fine = WaveMeter(GEOM)
+    fine.record_wave(sectored=True, k_pages=1, slots=[(0, 0, 12)])
+    assert coarse.decode_j > fine.decode_j
+    assert coarse.totals["pages_fetched"] == coarse.totals["pages_valid"]
+
+
+def test_attn_mass_captured_estimate():
+    # concentrated mass on page 0 + the current page: k=2 captures ~all
+    table = np.zeros((1, 2, 8), np.float32)
+    table[..., 0] = 10.0
+    table[..., 5] = 0.5  # current page (position 23, page_size 4)
+    table[..., 1:5] = 0.01
+    high = attn_mass_captured(table, position=23, page_size=4, k=2)
+    assert high > 0.95
+    # uniform mass: k of n_valid captures ~k/n_valid
+    uniform = np.ones((1, 2, 8), np.float32)
+    est = attn_mass_captured(uniform, position=23, page_size=4, k=2)
+    assert est == pytest.approx(2 / 6)
+    # selection covering every valid page is full coverage by definition
+    assert attn_mass_captured(uniform, position=7, page_size=4, k=4) == 1.0
+    # empty table (no observations yet) reports full coverage, not 0/0
+    assert attn_mass_captured(np.zeros((1, 1, 8), np.float32),
+                              position=23, page_size=4, k=2) == 1.0
+
+
+def test_metered_backend_requires_geometry():
+    with pytest.raises(ValueError, match="kv_geometry"):
+        MeteredBackend(_fake_backend())
+    backend = MeteredBackend(_fake_backend(), geometry=GEOM)
+    assert backend.supports_sectored
+    assert backend.k_for(0.5) is None  # inner backend cannot resolve k
+    # data-path callables delegate by identity (the session's wave cache
+    # keys on id(fn))
+    assert backend.decode_fn is backend.inner.decode_fn
+    assert backend.prefill_fn is backend.inner.prefill_fn
+    assert backend.sectored_fn_for(None) is backend.inner.sectored_fn
+
+
+# -- AdaptiveSectorPolicy -----------------------------------------------------
+
+
+class _FakeRecorder:
+    def __init__(self, **ema):
+        self.ema = ema
+
+
+def test_adaptive_policy_narrow_widen_hold():
+    pol = AdaptiveSectorPolicy(_FakeRecorder(), target_coverage=0.7,
+                               deadband=0.1, frac_step=0.25, min_frac=0.25,
+                               max_frac=1.0, init_frac=0.5)
+    # no signal yet: hold at init_frac, sectored stays on
+    d = pol.decide(0.5, {})
+    assert d.use_sectored and d.topk_frac == 0.5
+    # above target + deadband: narrow
+    pol.recorder.ema["attn_mass"] = 0.95
+    assert pol.decide(0.5, {}).topk_frac == 0.25
+    # clamped at min_frac
+    assert pol.decide(0.5, {}).topk_frac == 0.25
+    # below target - deadband: widen
+    pol.recorder.ema["attn_mass"] = 0.3
+    assert pol.decide(0.5, {}).topk_frac == 0.5
+    # inside the deadband: hold
+    pol.recorder.ema["attn_mass"] = 0.7
+    assert pol.decide(0.5, {}).topk_frac == 0.5
+    # clamped at max_frac
+    pol.recorder.ema["attn_mass"] = 0.0
+    assert pol.decide(0.5, {}).topk_frac == 0.75
+    assert pol.decide(0.5, {}).topk_frac == 1.0
+    assert pol.decide(0.5, {}).topk_frac == 1.0
+
+
+def test_adaptive_policy_signal_fallback_and_validation():
+    # attn_mass absent: falls back to sector_coverage
+    pol = AdaptiveSectorPolicy(_FakeRecorder(sector_coverage=0.95),
+                               frac_step=0.25, init_frac=0.5, min_frac=0.25)
+    assert pol.decide(0.5, {}).topk_frac == 0.25
+    # explicit sector signal ignores attn_mass
+    pol2 = AdaptiveSectorPolicy(
+        _FakeRecorder(sector_coverage=0.2, attn_mass=0.95),
+        signal="sector_coverage", frac_step=0.25, init_frac=0.5)
+    assert pol2.decide(0.5, {}).topk_frac == 0.75
+    with pytest.raises(ValueError, match="init_frac"):
+        AdaptiveSectorPolicy(_FakeRecorder(), init_frac=0.01, min_frac=0.25)
+
+
+# -- metered session integration ---------------------------------------------
+
+
+def test_unmetered_session_has_no_meter():
+    sess = ServeSession(_fake_backend(), max_batch=2)
+    assert sess.meter is None
+    handle = sess.submit(Request(0, np.arange(4, dtype=np.int32),
+                                 max_new_tokens=3))
+    sess.run_until_drained()
+    assert handle.telemetry is None and handle.energy_j is None
+
+
+def test_metered_fifo_and_overlap_report_identical_energy():
+    """Acceptance: metering is scheduler-transparent — identical token
+    streams yield bit-identical joules (energy derives from deterministic
+    counters, never wall-clock)."""
+
+    def run(scheduler):
+        backend = MeteredBackend(_fake_backend(), geometry=GEOM)
+        sess = ServeSession(backend, max_batch=2, scheduler=scheduler,
+                            policy=AlwaysSectored())
+        reqs = [Request(rid, np.arange(4, dtype=np.int32), max_new_tokens=4)
+                for rid in range(5)]
+        handles = [sess.submit(r) for r in reqs]
+        sess.run_until_drained()
+        toks = {h.rid: h.peek() for h in handles}
+        return toks, backend.meter
+
+    toks_fifo, meter_fifo = run(FifoScheduler())
+    toks_ov, meter_ov = run(OverlapScheduler())
+    assert toks_fifo == toks_ov
+    assert meter_fifo.energy_j == meter_ov.energy_j  # bit-identical
+    assert meter_fifo.totals["pages_fetched"] == \
+        meter_ov.totals["pages_fetched"]
+    assert meter_fifo.totals["tokens"] == meter_ov.totals["tokens"]
+    assert meter_ov.totals["overlapped_prefills"] >= 1
+    assert meter_fifo.totals["overlapped_prefills"] == 0
+    # per-request attribution matches across schedulers too
+    for rid in toks_fifo:
+        assert meter_fifo.per_request[rid] == meter_ov.per_request[rid]
+
+
+def test_metered_sectored_backend_fifo_overlap_identity(setup):
+    """The real SectoredState path: fifo/overlap token identity is
+    preserved under metering and both report identical energy; per-request
+    attribution sums to the meter total and surfaces via StreamHandle."""
+    cfg, params = setup
+
+    def run(scheduler):
+        inner = sectored_decode.make_serving_fns(cfg, params=params,
+                                                 seq_len=48)
+        backend = MeteredBackend(inner)
+        sess = ServeSession(backend, max_batch=2, scheduler=scheduler,
+                            policy=AlwaysSectored())
+        handles = [sess.submit(r) for r in _reqs(cfg, 4, max_new_tokens=4,
+                                                 seed=3)]
+        sess.run_until_drained()
+        return {h.rid: h.peek() for h in handles}, backend.meter, handles
+
+    toks_fifo, meter_fifo, _ = run(FifoScheduler())
+    toks_ov, meter_ov, handles = run(OverlapScheduler())
+    assert toks_fifo == toks_ov
+    assert meter_fifo.energy_j == pytest.approx(meter_ov.energy_j, rel=1e-12)
+    assert meter_fifo.totals["pages_fetched"] == \
+        pytest.approx(meter_ov.totals["pages_fetched"])
+    assert meter_ov.energy_j > 0.0
+    # the sectored path recorded coverage + the predictor mass estimate
+    assert 0.0 < meter_ov.recorder.ema["sector_coverage"] <= 1.0
+    assert "attn_mass" in meter_ov.recorder.ema
+    # StreamHandle attribution: every request carries energy; sums match
+    total = sum(h.energy_j for h in handles)
+    assert total == pytest.approx(meter_ov.energy_j)
+    assert all(h.telemetry["tokens"] == len(h.peek()) for h in handles)
+
+
+def test_energy_ordering_adaptive_static_dense(setup):
+    """Acceptance (scaled-down benchmark): adaptive J/token <= static <=
+    dense on the yi-6b smoke arch, on one shared SectoredKVBackend."""
+    cfg, params = setup
+    inner = sectored_decode.make_serving_fns(cfg, params=params, seq_len=384,
+                                             min_topk=1)
+    static_frac = 0.7  # 2 of 3 pages
+
+    def run(policy_name):
+        backend = MeteredBackend(inner,
+                                 sectored_hw=policy_name != "dense")
+        if policy_name == "dense":
+            policy = AlwaysDense()
+        elif policy_name == "static":
+            policy = AlwaysSectored(topk_frac=static_frac)
+        else:
+            policy = AdaptiveSectorPolicy(
+                backend.meter.recorder, target_coverage=0.5, deadband=0.15,
+                frac_step=1 / 3, min_frac=1 / 3, init_frac=1 / 3,
+                max_frac=static_frac)
+        sess = ServeSession(backend, max_batch=2, scheduler=FifoScheduler(),
+                            policy=policy)
+        rng = np.random.default_rng(7)
+        handles = [sess.submit(Request(
+            rid, rng.integers(0, cfg.vocab, size=280).astype(np.int32),
+            max_new_tokens=10)) for rid in range(2)]
+        sess.run_until_drained()
+        assert all(h.done for h in handles)
+        report = backend.meter.report()
+        return metrics.dram_energy_per_token(report["energy_j"],
+                                             report["tokens"])
+
+    dense_jpt = run("dense")
+    static_jpt = run("static")
+    adaptive_jpt = run("adaptive")
+    assert adaptive_jpt <= static_jpt <= dense_jpt
+    assert static_jpt < dense_jpt  # strictly: fewer pages move
+
+
+def test_merge_demands_counted_by_meter(setup):
+    """Shared-prefix requests still OR-merge under metering and the merge
+    passthrough is counted on the meter."""
+    cfg, params = setup
+    inner = sectored_decode.make_serving_fns(cfg, params=params, seq_len=48)
+    backend = MeteredBackend(inner)
+    sess = ServeSession(backend, max_batch=2, scheduler=OverlapScheduler(),
+                        policy=AlwaysSectored())
+    shared = np.arange(6, dtype=np.int32) % cfg.vocab
+    handles = [sess.submit(Request(rid, shared.copy(), max_new_tokens=3))
+               for rid in range(2)]
+    stats = sess.run_until_drained()
+    assert stats["merged_slots"] > 0
+    assert backend.meter.totals["demand_merges"] > 0
+    assert handles[0].peek() == handles[1].peek()
