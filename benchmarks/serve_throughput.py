@@ -1,8 +1,8 @@
-"""Serving throughput: looped wave vs. vectorized FIFO vs. overlap.
+"""Serving throughput: looped wave vs. vectorized FIFO vs. overlap vs. mesh.
 
-Measures tokens/sec of three ServeSession configurations on identical
-request streams — the serving analogue of the paper's merged memory
-accesses vs. one-by-one issue:
+Measures tokens/sec of ServeSession configurations on identical request
+streams — the serving analogue of the paper's merged memory accesses vs.
+one-by-one issue:
 
 * ``looped``  — per-slot reference wave (``max_batch`` sequential decode
   calls per step), FIFO admission.
@@ -11,11 +11,17 @@ accesses vs. one-by-one issue:
 * ``overlap`` — vectorized wave + ``OverlapScheduler``: queued prompts are
   prefilled in vmapped batches while the decode wave is in flight and
   installed at the next step boundary (paged-KV admission).
+* ``mesh``    — overlap + ``MeshBackend``: the wave's slot axis sharded
+  over a device mesh (``--mesh``, default data-parallel over 2 devices),
+  donor-device prefill. Included when the host has enough devices
+  (simulate on CPU with XLA_FLAGS=--xla_force_host_platform_device_count=8).
 
-All three must produce identical tokens (asserted). At ``max_batch >= 4``
-the vectorized wave must beat the loop (ISSUE 1) and overlap must be at
-least as fast as fifo (ISSUE 2). Results land in ``BENCH_serve.json`` so
-the trajectory is tracked across PRs.
+All modes must produce identical tokens (asserted — the mesh placement is
+bitwise-transparent). At ``max_batch >= 4`` the vectorized wave must beat
+the loop (ISSUE 1) and overlap must be at least as fast as fifo (ISSUE 2);
+at ``max_batch >= 8`` the mesh wave must beat single-device overlap
+(ISSUE 4). Results land in ``BENCH_serve.json`` so the trajectory is
+tracked across PRs.
 
 Run: PYTHONPATH=src python benchmarks/serve_throughput.py [--max-batch 4]
 """
@@ -29,9 +35,10 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.launch import mesh as mesh_mod
 from repro.models import model
-from repro.serve import (FifoScheduler, OverlapScheduler, Request,
-                         ServeSession, ServingBackend)
+from repro.serve import (FifoScheduler, MeshBackend, OverlapScheduler,
+                         Request, ServeSession, ServingBackend)
 
 try:
     from benchmarks import common
@@ -83,7 +90,7 @@ def _timed_run(sess, cfg, *, n_requests, max_new_tokens):
 
 
 def compare(cfg, params, max_batch=4, n_requests=None, max_new_tokens=12,
-            repeats=4):
+            repeats=4, mesh_spec=None):
     """Best-of-``repeats`` tokens/sec per mode, repeats interleaved across
     modes so transient machine load penalizes every mode equally.
 
@@ -93,9 +100,19 @@ def compare(cfg, params, max_batch=4, n_requests=None, max_new_tokens=12,
     which long decode runs dilute toward noise.
     """
     n_requests = n_requests or 4 * max_batch
+    modes = dict(MODES)
+    if mesh_spec is not None:
+        modes["mesh"] = (OverlapScheduler, True)
     sessions, tps, toks = {}, {}, {}
-    for mode, (scheduler_cls, vectorized) in MODES.items():
-        sess = ServeSession(_make_backend(cfg, params), max_batch=max_batch,
+    for mode, (scheduler_cls, vectorized) in modes.items():
+        backend = _make_backend(cfg, params)
+        if mode == "mesh":
+            # dense backend: slot-axis DP only (shard_pages auto-off; a
+            # dense attend over a sharded sequence axis would reorder
+            # float reductions and break the identical-tokens assertion)
+            backend = MeshBackend(backend,
+                                  mesh_mod.make_serving_mesh(mesh_spec))
+        sess = ServeSession(backend, max_batch=max_batch,
                             scheduler=scheduler_cls(), vectorized=vectorized)
         # warm EACH session instance with the same shape profile as the
         # timed run (same request count => same vmapped-prefill group
@@ -112,7 +129,7 @@ def compare(cfg, params, max_batch=4, n_requests=None, max_new_tokens=12,
             tps[mode] = max(tps[mode], rep_tps)
             assert toks.setdefault(mode, rep_toks) == rep_toks, (
                 f"{mode} diverged between repeats")
-    for mode in MODES:
+    for mode in modes:
         assert toks[mode] == toks["looped"], (
             f"{mode} diverged from looped on generated tokens")
     return tps
@@ -126,7 +143,23 @@ def main(argv=None):
                     help="0 = 4 * max_batch")
     ap.add_argument("--max-new-tokens", type=int, default=12)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--repeats", type=int, default=4,
+                    help="interleaved best-of repeats (raise on noisy "
+                         "hosts to stabilize the mode ranking)")
+    ap.add_argument("--mesh", default="2",
+                    help="mesh shape for the mesh variant ('d' or 'dxm'); "
+                         "'off' disables it; skipped automatically when "
+                         "the host has too few devices")
     args = ap.parse_args(argv)
+
+    mesh_spec = None
+    if args.mesh != "off":
+        shape, _ = mesh_mod.parse_mesh_shape(args.mesh)
+        if int(np.prod(shape)) <= jax.device_count():
+            mesh_spec = args.mesh
+        else:
+            print(f"mesh variant skipped: {args.mesh} needs "
+                  f"{int(np.prod(shape))} devices, have {jax.device_count()}")
 
     cfg = configs.get(args.arch).reduced(n_layers=2, d_model=64, n_heads=4,
                                          n_kv_heads=2, d_ff=128, vocab=256,
@@ -134,9 +167,10 @@ def main(argv=None):
     params = model.init_params(cfg, jax.random.key(0))
     tps = compare(cfg, params, max_batch=args.max_batch,
                   n_requests=args.requests or None,
-                  max_new_tokens=args.max_new_tokens)
+                  max_new_tokens=args.max_new_tokens, repeats=args.repeats,
+                  mesh_spec=mesh_spec)
     print(f"arch={cfg.name} max_batch={args.max_batch}")
-    for mode in MODES:
+    for mode in tps:
         rel = tps[mode] / tps["looped"]
         print(f"{mode:10s} {tps[mode]:10.1f} tokens/sec ({rel:.2f}x)")
 
@@ -145,6 +179,9 @@ def main(argv=None):
                   tokens_per_sec={m: round(t, 1) for m, t in tps.items()},
                   vectorized_speedup=round(tps["fifo"] / tps["looped"], 3),
                   overlap_speedup=round(tps["overlap"] / tps["fifo"], 3))
+    if mesh_spec is not None:
+        result["mesh_shape"] = mesh_spec
+        result["mesh_speedup"] = round(tps["mesh"] / tps["overlap"], 3)
     out = common.write_bench_json(args.out, result)
     print(f"wrote {out}")
 
@@ -153,7 +190,12 @@ def main(argv=None):
             raise SystemExit("FAIL: vectorized engine did not beat the loop")
         if tps["overlap"] < tps["fifo"]:
             raise SystemExit("FAIL: overlap scheduler lost to fifo")
-        print("OK: vectorized wins, overlap >= fifo")
+        if mesh_spec is not None and args.max_batch >= 8 \
+                and tps["mesh"] <= tps["overlap"]:
+            raise SystemExit("FAIL: mesh wave lost to single-device overlap")
+        print("OK: vectorized wins, overlap >= fifo"
+              + (", mesh > overlap" if mesh_spec and args.max_batch >= 8
+                 else ""))
     else:
         print("informational (max_batch < 4)")
 

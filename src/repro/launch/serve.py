@@ -41,11 +41,12 @@ import numpy as np
 
 from repro import configs
 from repro.core import metrics
+from repro.launch import mesh as mesh_mod
 from repro.models import model
 from repro.runtime import sectored_decode
 from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
                          EngineConfig, FifoScheduler, HysteresisPolicy,
-                         OverlapScheduler, Request, ServeSession,
+                         MeshBackend, OverlapScheduler, Request, ServeSession,
                          ServingBackend)
 from repro.serve import engine as engine_mod  # noqa: F401  (legacy re-export)
 from repro.telemetry import KVGeometry, MeteredBackend
@@ -97,7 +98,8 @@ def build_policy(name, recorder=None):
 
 def build_session(cfg, params, *, max_batch=4, sectored=True,
                   scheduler="fifo", vectorized=True, true_sectored=False,
-                  seq_len=256, telemetry=False, policy="hysteresis") -> ServeSession:
+                  seq_len=256, telemetry=False, policy="hysteresis",
+                  mesh=None) -> ServeSession:
     backend = build_backend(cfg, params, sectored=sectored,
                             true_sectored=true_sectored, seq_len=seq_len)
     if telemetry or policy == "adaptive":
@@ -115,6 +117,15 @@ def build_session(cfg, params, *, max_batch=4, sectored=True,
         pol = build_policy(policy, backend.meter.recorder)
     else:
         pol = build_policy(policy)
+    if mesh is not None:
+        mesh_obj = (mesh if not isinstance(mesh, str)
+                    else mesh_mod.make_serving_mesh(mesh))
+        if not vectorized:
+            raise ValueError("--mesh needs the vectorized wave "
+                             "(--engine vectorized)")
+        # MeshBackend is the outermost decorator: the session discovers
+        # its wave/placement hooks directly, the meter passes through
+        backend = MeshBackend(backend, mesh_obj)
     sched = OverlapScheduler() if scheduler == "overlap" else FifoScheduler()
     return ServeSession(backend, max_batch=max_batch, scheduler=sched,
                         policy=pol, vectorized=vectorized)
@@ -158,6 +169,12 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None,
                     help="with --telemetry: dump the per-wave trace JSONL "
                          "here")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard decode waves over a device mesh, e.g. "
+                         "'4x2' (data=4, model=2) or '2' (data only); "
+                         "tokens and joules are mesh-shape-invariant "
+                         "(simulate devices on CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -169,7 +186,8 @@ def main(argv=None):
                          scheduler=args.scheduler,
                          vectorized=args.engine == "vectorized",
                          true_sectored=args.true_sectored,
-                         telemetry=telemetry, policy=args.policy)
+                         telemetry=telemetry, policy=args.policy,
+                         mesh=args.mesh)
     rng = np.random.default_rng(0)
     handles = []
     for rid in range(args.requests):
@@ -178,8 +196,10 @@ def main(argv=None):
                                            max_new_tokens=args.max_new_tokens)))
     stats = sess.run_until_drained()
     assert all(h.done for h in handles)
+    mesh_tag = ("" if sess.mesh is None
+                else f"mesh={'x'.join(map(str, sess.mesh.devices.shape))} ")
     print(f"arch={cfg.name} engine={args.engine} scheduler={args.scheduler} "
-          f"completed={stats['completed']} "
+          f"{mesh_tag}completed={stats['completed']} "
           f"decode_steps={stats['decode_steps']} waves={stats['waves']} "
           f"sectored_steps={stats['sectored_steps']} "
           f"merged_slots={stats['merged_slots']} "

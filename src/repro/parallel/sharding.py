@@ -83,15 +83,15 @@ def param_spec(path, leaf, fsdp_axis) -> P:
     return spec
 
 
-def fix_spec(spec: P, shape, mesh) -> P:
-    """Make a spec divisibility-valid for this mesh.
+def drop_indivisible(spec: P, shape, mesh) -> tuple[P, list]:
+    """Drop axes from dims they do not divide; NO re-placement.
 
-    For each dim whose size is not divisible by its assigned axes, the axes
-    are dropped; a dropped 'model' axis is re-placed on the first unassigned
-    dim it divides (moving tensor parallelism to a contraction dim — the
-    GQA-kv-heads < TP-degree case, where Megatron-style stacks duplicate KV
-    heads; here the input dim is sharded instead and XLA inserts the
-    partial-sum reduce).
+    Returns ``(fixed_spec, dropped_axes)``. This is the safe half of
+    :func:`fix_spec`: a dropped axis degrades that dim to replicated and
+    nothing else changes — callers with a placement contract to keep
+    (:func:`wave_state_shardings`' gather-only 'model' shard) use this
+    directly so an indivisible axis can never be re-homed onto a
+    contraction dim behind their back.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
@@ -110,6 +110,22 @@ def fix_spec(spec: P, shape, mesh) -> P:
         if ax and shape[i] % prod != 0:
             dropped.extend(ax)
             entries[i] = None
+    return P(*entries), dropped
+
+
+def fix_spec(spec: P, shape, mesh) -> P:
+    """Make a spec divisibility-valid for this mesh.
+
+    For each dim whose size is not divisible by its assigned axes, the axes
+    are dropped (:func:`drop_indivisible`); a dropped 'model' axis is
+    re-placed on the first unassigned dim it divides (moving tensor
+    parallelism to a contraction dim — the GQA-kv-heads < TP-degree case,
+    where Megatron-style stacks duplicate KV heads; here the input dim is
+    sharded instead and XLA inserts the partial-sum reduce).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed, dropped = drop_indivisible(spec, shape, mesh)
+    entries = list(fixed)
     for a in dropped:
         if a != "model":
             continue
@@ -134,6 +150,85 @@ def param_shardings(mesh, params_shape, fsdp: bool = False):
 def batch_sharding(mesh):
     """(B, S) token batches: batch over all DP axes."""
     return NamedSharding(mesh, P(data_axes(mesh), None))
+
+
+def sectored_state_shardings(mesh, state_shape, long_context: bool = False):
+    """SectoredState (kv + sector table + position): batch over DP axes,
+    KV sequence/pages over 'model' — the serving twin of
+    ``decode_state_shardings`` that also knows the predictor leaves.
+
+    Used by ``runtime.sectored_decode.make_sectored_decode_step`` (its
+    per-leaf rules used to live inline there) and, slot-stacked, by
+    :func:`wave_state_shardings`.
+    """
+    dp = data_axes(mesh)
+
+    def one(path, leaf):
+        name = _last(path)
+        if name in ("k", "v"):
+            if long_context:
+                spec = P(None, None, tuple(dp) + ("model",), None, None)
+            else:
+                spec = P(None, dp, "model", None, None)
+        elif name == "table":
+            spec = P(None, dp if not long_context else None, None, None)
+        elif name == "position":
+            spec = P(dp if not long_context else None)
+        elif name == "length":
+            spec = P(None, dp if not long_context else None)
+        else:
+            spec = P()
+        return NamedSharding(mesh, fix_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+def wave_state_shardings(mesh, stacked_state, *, shard_pages: bool = True):
+    """Shardings for a ServeSession wave buffer (leading *slot* axis).
+
+    The stacked pytree holds one row per slot (each row a B=1 decode
+    state), so the slot axis is the wave's batch: it shards over the DP
+    axes. KV cache leaves additionally spread their page/sequence axis
+    (third-from-last: ``(..., S_pad, Hkv, hd)``) over 'model' when
+    ``shard_pages`` — KV *storage* is distributed over the whole mesh and
+    the sectored gather pulls selected pages across 'model' shards
+    (device-to-device sector fetch). Only gather-based attends may enable
+    this: a dense attend contracting over a sharded sequence axis would
+    reorder float reductions and break the cross-mesh bitwise oracle.
+
+    Divisibility is repaired per leaf by :func:`drop_indivisible` — an
+    indivisible slot or page axis degrades to replicated, never errors,
+    and is deliberately NOT re-homed onto another dim (``fix_spec``'s
+    'model' re-placement could land it on a contraction dim and silently
+    void the gather-only bitwise guarantee above).
+    """
+    dp = data_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def one(path, leaf):
+        name = _last(path)
+        if name in ("k", "v") and shard_pages and model and leaf.ndim >= 4:
+            spec = P(dp, *((None,) * (leaf.ndim - 4)), model, None, None)
+        else:
+            spec = P(dp, *((None,) * max(leaf.ndim - 1, 0)))
+        return NamedSharding(mesh,
+                             drop_indivisible(spec, leaf.shape, mesh)[0])
+
+    return jax.tree_util.tree_map_with_path(one, stacked_state)
+
+
+def wave_token_sharding(mesh, shape=None):
+    """(slots, 1, 1) wave token batches: slot axis over the DP axes.
+
+    Pass the concrete token ``shape`` to get the same divisibility repair
+    the state leaves get — an indivisible slot axis degrades to
+    replicated instead of erroring at ``device_put`` (a session's
+    ``max_batch`` need not divide the mesh's data axis).
+    """
+    spec = P(data_axes(mesh), None, None)
+    if shape is not None:
+        spec, _ = drop_indivisible(spec, shape, mesh)
+    return NamedSharding(mesh, spec)
 
 
 def decode_state_shardings(mesh, state_shape, long_context: bool):

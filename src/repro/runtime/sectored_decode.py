@@ -210,25 +210,8 @@ def make_sectored_decode_step(cfg, mesh, *, batch: int, seq_len: int,
         mesh, jax.eval_shape(lambda: model.init_params(cfg, jax.random.key(0))))
     state_shape = jax.eval_shape(lambda: init_state(cfg, batch, seq_len))
     dp = sharding.data_axes(mesh)
-
-    def state_spec(path, leaf):
-        name = sharding._last(path)
-        if name in ("k", "v"):
-            if long_context:
-                spec = P(None, None, tuple(dp) + ("model",), None, None)
-            else:
-                spec = P(None, dp, "model", None, None)
-        elif name == "table":
-            spec = P(None, dp if not long_context else None, None, None)
-        elif name == "position":
-            spec = P(dp if not long_context else None)
-        elif name == "length":
-            spec = P(None, dp if not long_context else None)
-        else:
-            spec = P()
-        return NamedSharding(mesh, sharding.fix_spec(spec, leaf.shape, mesh))
-
-    sspec = jax.tree_util.tree_map_with_path(state_spec, state_shape)
+    sspec = sharding.sectored_state_shardings(mesh, state_shape,
+                                              long_context=long_context)
     tok_spec = NamedSharding(mesh, P(dp if not long_context else None, None))
     return fn, (pspec, sspec, tok_spec), state_shape
 

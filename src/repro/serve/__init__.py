@@ -17,6 +17,11 @@ controller:
 * :mod:`repro.serve.session` — **ServeSession**: the facade composing the
   three. ``submit()`` returns a ``StreamHandle`` (``poll()`` /
   ``tokens()``) rather than mutating the request.
+* :mod:`repro.serve.mesh_backend` — **MeshBackend**: multi-device wave
+  execution. Slot axis over the mesh's ``data`` axes, paged KV over
+  ``('data', 'model')``, donor-device prefill for the overlap second
+  stream — token streams and metered joules stay bit-identical across
+  mesh shapes (the cross-mesh oracle, ``tests/test_serve_mesh.py``).
 * :mod:`repro.serve.engine` — legacy ``Engine`` / ``LoopedEngine`` shims
   over ``ServeSession`` for pre-redesign call sites.
 
@@ -34,6 +39,7 @@ back to paper §8.1.
 
 from repro.serve.backend import DecodeBackend, ServingBackend
 from repro.serve.engine import Engine, EngineConfig, LoopedEngine
+from repro.serve.mesh_backend import MeshBackend
 from repro.serve.policy import (AdaptiveSectorPolicy, AlwaysDense,
                                 AlwaysSectored, HysteresisPolicy,
                                 PathDecision, SectorPolicy)
@@ -43,7 +49,7 @@ from repro.serve.session import (PrefillGroup, Request, ServeSession,
                                  stacked_row_signature)
 
 __all__ = [
-    "DecodeBackend", "ServingBackend",
+    "DecodeBackend", "MeshBackend", "ServingBackend",
     "Engine", "EngineConfig", "LoopedEngine",
     "AdaptiveSectorPolicy", "AlwaysDense", "AlwaysSectored",
     "HysteresisPolicy", "PathDecision", "SectorPolicy",

@@ -28,13 +28,19 @@ class DecodeBackend(Protocol):
     are arbitrary pytrees — the session stacks them along a fresh leading
     slot axis without knowing their internal layout.
 
-    Two *optional* attributes extend the protocol (discovered via
-    ``getattr``, never required): ``meter`` — a
-    :class:`~repro.telemetry.meters.WaveMeter` the session drives around
-    each wave (:class:`~repro.telemetry.meters.MeteredBackend` is the
-    decorator that adds one to any backend) — and ``k_for(topk_frac)``,
-    the concrete page budget a policy fraction resolves to, which the
-    meter charges fetch energy for.
+    Optional attributes extend the protocol (discovered via ``getattr``,
+    never required):
+
+    * ``meter`` — a :class:`~repro.telemetry.meters.WaveMeter` the session
+      drives around each wave (:class:`~repro.telemetry.meters.
+      MeteredBackend` is the decorator that adds one to any backend);
+    * ``k_for(topk_frac)`` — the concrete page budget a policy fraction
+      resolves to, which the meter charges fetch energy for;
+    * the mesh hooks a :class:`~repro.serve.mesh_backend.MeshBackend`
+      carries: ``wave_for(fn)`` (mesh-placed jitted wave),
+      ``place_stacked(stacked)`` (wave-buffer placement),
+      ``place_rows(rows)`` (device-to-device admission handoff), and
+      ``vmapped_prefill(prompts)`` (donor-device group prefill).
     """
 
     prefill_fn: Callable

@@ -1,0 +1,249 @@
+"""MeshBackend: multi-device wave execution for ``ServeSession``.
+
+The paper's end game is throughput at scale under high memory-level
+parallelism (§8): route every access class to the resource that serves it
+cheapest. The serving translation of that principle:
+
+* the wave's **slot axis** shards over the mesh's data-parallel axes —
+  batch capacity scales with devices while each slot's sectored fetch
+  path stays fixed-width per chip;
+* the **paged KV cache** additionally spreads its page axis over
+  ``'model'`` (storage distributed over the whole mesh); the sectored
+  gather then pulls the predictor-selected pages across 'model' shards —
+  a device-to-device sector fetch, the VBL transfer crossing chips;
+* **prefill** runs on a *donor* device off the wave's critical resources
+  (``OverlapScheduler``'s second stream becomes a real second stream),
+  and the finished group's KV pages are handed device-to-device into the
+  wave placement at admission.
+
+Determinism contract (the cross-mesh oracle, ``tests/test_serve_mesh.py``):
+token streams and metered joules are **bit-identical across mesh
+shapes** — (1,), (2, 1), (4, 2) all reproduce the single-device stream.
+That holds because every cross-shard interaction this placement induces
+is pure data movement: the slot axis is vmapped (no cross-slot math), the
+page-axis shard is only ever *gathered* (the sectored/exact attend
+contracts over the gathered buffer, never over the sharded cache axis),
+and energy derives from host-side counters. Page sharding is therefore
+auto-enabled only for gather-based backends (those exposing ``k_for``,
+i.e. ``SectoredKVBackend``); a dense attend contracting over a sharded
+sequence axis would reorder float reductions and break the oracle.
+
+``MeshBackend`` is a transparent decorator like
+:class:`~repro.telemetry.meters.MeteredBackend` and composes with it in
+either order: unknown attributes (``meter``, ``k_for``, ``kv_geometry``,
+...) delegate to the wrapped backend.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding
+
+
+class MeshBackend:
+    """Wrap a ``DecodeBackend`` so session waves run sharded over a mesh.
+
+    The session discovers the four optional hooks by ``getattr`` (see
+    ``serve.backend.DecodeBackend``): ``wave_for`` (mesh-placed jitted
+    wave), ``place_stacked`` (wave-buffer placement), ``place_rows``
+    (device-to-device admission handoff), and ``vmapped_prefill`` (donor
+    group prefill). A plain backend has none and the session behaves
+    exactly as before.
+    """
+
+    def __init__(self, inner, mesh, *, shard_pages: bool | None = None,
+                 donor_prefill: bool = True):
+        self.inner = inner
+        self.mesh = mesh
+        if shard_pages is None:
+            # gather-based data paths only (see module docstring). Probe by
+            # CALLING k_for, not by attribute presence: a MeteredBackend
+            # always has the method but answers None over a dense inner
+            # backend, and a dense attend must never get a sharded page axis
+            k_for = getattr(inner, "k_for", None)
+            shard_pages = k_for is not None and k_for(None) is not None
+        self.shard_pages = shard_pages
+        self._token_sharding_cache: dict[tuple, Any] = {}
+        self._replicated = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        # donor device for prefill: the last mesh device, so the wave's
+        # slot shards (filled from device 0 upward) drain before prefill
+        # contention matters on small meshes
+        devices = mesh.devices.reshape(-1)
+        self._donor = (devices[-1] if donor_prefill else devices[0])
+        self._donor_sharding = jax.sharding.SingleDeviceSharding(self._donor)
+        self._sharding_cache: dict[tuple, Any] = {}
+        self._vp_jit: Callable | None = None
+        self.prefill_fn = self._donor_prefill
+        # NOTE: a meter's mesh_shape provenance stamp is owned by the
+        # ServeSession that actually drives waves (it clears the stamp
+        # when the same meter is later reused unmeshed) — constructing a
+        # wrapper must not mutate shared telemetry state
+
+    # -- mesh identity -----------------------------------------------------
+
+    @property
+    def mesh_shape(self) -> tuple[int, ...]:
+        return tuple(self.mesh.devices.shape)
+
+    @property
+    def donor_device(self):
+        """The device prefill streams on (the overlap second stream)."""
+        return self._donor
+
+    # -- placement ---------------------------------------------------------
+
+    def wave_shardings(self, stacked: Any):
+        """NamedSharding pytree for a slot-stacked state (cached per
+        shape/dtype signature — shardings are static per wave layout)."""
+        key = tuple((tuple(x.shape), str(x.dtype))
+                    for x in jax.tree.leaves(stacked))
+        shardings = self._sharding_cache.get(key)
+        if shardings is None:
+            shardings = sharding.wave_state_shardings(
+                self.mesh, stacked, shard_pages=self.shard_pages)
+            self._sharding_cache[key] = shardings
+        return shardings
+
+    def place_stacked(self, stacked: Any) -> Any:
+        """Place (or repair) a wave buffer onto its mesh shardings.
+
+        ``device_put`` onto an already-correct sharding is a no-op, so
+        calling this every wave costs a pytree walk, not a transfer.
+        """
+        return jax.device_put(stacked, self.wave_shardings(stacked))
+
+    def _token_sharding_for(self, shape) -> Any:
+        """Token-batch sharding repaired for the concrete (slots, 1, 1)
+        shape — an indivisible slot axis degrades to replicated exactly
+        like the state leaves do, instead of erroring at device_put."""
+        key = tuple(shape)
+        sh = self._token_sharding_cache.get(key)
+        if sh is None:
+            sh = sharding.wave_token_sharding(self.mesh, shape)
+            self._token_sharding_cache[key] = sh
+        return sh
+
+    def place_rows(self, rows: Any) -> Any:
+        """Device-to-device admission handoff: move prefilled rows off the
+        donor device and REPLICATE them over the wave's devices so the
+        multi-slot admission scatter runs colocated with the sharded wave
+        buffer (the scatter keeps the buffer's sharding; each shard then
+        reads the rows landing in its slots from its local replica, no
+        further transfer). Replication is deliberate simplicity: rows can
+        target arbitrary slots, so a slot-exact placement would need the
+        scatter's index mapping; the cost is group-size × mesh-size copies
+        per admission, paid off the wave's critical path."""
+        return jax.device_put(rows, self._replicated)
+
+    # -- wave execution ----------------------------------------------------
+
+    def wave_for(self, fn: Callable) -> Callable:
+        """Mesh-placed jitted wave for a per-slot step fn.
+
+        Mirrors the session's default ``jit(vmap(fn))`` but (a) pins the
+        stacked state and token batch to their mesh shardings before each
+        dispatch (output shardings propagate, so steady-state waves pay no
+        transfers), and (b) fuses the next-token selection into the wave
+        executable (``returns_tokens = True``): each shard argmaxes its
+        own slots' logits locally, so ONE dispatch per wave moves
+        ``(slots,)`` int32 to the host instead of a second eagerly
+        dispatched SPMD reduction gathering ``(slots, vocab)`` logits
+        across devices. Selection is per-slot and first-max, exactly like
+        the host-side ``np.argmax`` of the default path, so tokens stay
+        bit-identical to the unmeshed session (the cross-mesh oracle
+        covers this fused path).
+
+        Memoization is the caller's job (``ServeSession._wave_for`` caches
+        per ``id(fn)``); the identity anchors for the steady-state
+        short-circuit live in the returned closure, so two sessions
+        driving one backend cannot thrash each other's anchors.
+        """
+        def fused(state, token):
+            logits, new_state = fn(state, token)
+            # keep the token's (1, 1) row shape so the stacked output
+            # can feed the next wave directly (device-side feedback)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return tok.reshape(1, 1), new_state
+
+        jitted = jax.jit(jax.vmap(fused))
+        last_state = last_tokens = None
+
+        def wave(stacked, tokens):
+            # identity short-circuits: a state/token array this wave
+            # itself produced is already placed — steady-state decode
+            # re-enters with zero host->device transfers
+            nonlocal last_state, last_tokens
+            if stacked is not last_state:
+                stacked = self.place_stacked(stacked)
+            if tokens is not last_tokens:
+                tokens = jax.device_put(
+                    tokens, self._token_sharding_for(tokens.shape))
+            out, new_state = jitted(stacked, tokens)
+            last_tokens, last_state = out, new_state
+            return out, new_state
+
+        wave.returns_tokens = True
+        return wave
+
+    # -- prefill (donor stream) --------------------------------------------
+
+    def _donor_prefill(self, tokens):
+        """Single-prompt prefill pinned to the donor device (committed
+        inputs make the inner jitted prefill execute there)."""
+        tokens = jax.device_put(jnp.asarray(tokens, jnp.int32),
+                                self._donor_sharding)
+        return self.inner.prefill_fn(tokens)
+
+    def vmapped_prefill(self, prompts):
+        """Group prefill (ONE vmapped dispatch) on the donor device —
+        the scheduler's overlap stream runs here while the decode wave
+        occupies the mesh; ``place_rows`` hands the result over at
+        install time."""
+        if self._vp_jit is None:
+            inner_prefill = self.inner.prefill_fn
+            self._vp_jit = jax.jit(jax.vmap(lambda p: inner_prefill(p[None, :])))
+        prompts = jax.device_put(jnp.asarray(prompts, jnp.int32),
+                                 self._donor_sharding)
+        return self._vp_jit(prompts)
+
+    # -- data-path delegation ----------------------------------------------
+    # (identity-stable like MeteredBackend: the session's wave cache keys
+    # on id(fn), and wave_for above closes over the delegated identity)
+
+    @property
+    def decode_fn(self):
+        return self.inner.decode_fn
+
+    @property
+    def sectored_fn(self):
+        return self.inner.sectored_fn
+
+    @property
+    def demand_merge_fn(self):
+        return self.inner.demand_merge_fn
+
+    @property
+    def supports_sectored(self) -> bool:
+        return self.inner.supports_sectored
+
+    def sectored_fn_for(self, topk_frac: float | None):
+        return self.inner.sectored_fn_for(topk_frac)
+
+    def merge_demands(self, stacked_state: Any, group_ids: Any) -> Any:
+        return self.inner.merge_demands(stacked_state, group_ids)
+
+    def __getattr__(self, name: str):
+        # transparent decorator: meter / k_for / kv_geometry / ... pass
+        # through so MeshBackend and MeteredBackend compose in either order
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self.inner, name)
+
+    def __repr__(self) -> str:
+        return (f"MeshBackend({self.inner!r}, mesh={self.mesh_shape}, "
+                f"shard_pages={self.shard_pages})")

@@ -17,6 +17,16 @@ Two shipped policies:
   prompts of different raw lengths but the same length quantum share a
   wave, while a different quantum waits for the wave to drain.
 
+On a single device the overlap is pipelining against async dispatch; over
+a :class:`~repro.serve.mesh_backend.MeshBackend` it becomes a **real
+second stream**: the session's ``prefill_one`` / ``prefill_group`` calls
+resolve to the backend's donor-device prefill, which executes off the
+wave's mesh placement, and ``install``/``install_group`` hand the
+finished group's KV pages device-to-device onto the wave devices before
+admission. The scheduler itself is placement-blind — it drives the same
+session entry points either way, which is what keeps fifo and overlap
+token-identical on every mesh shape.
+
 On merge-free paths (dense backends, or sectored exact mode) both
 schedulers produce token-identical output on the same request trace
 (asserted in tests/test_serve_session.py): waves are vmapped over

@@ -19,6 +19,12 @@ The session composes three pluggable protocols:
 Wave execution comes in two flavors: vectorized (per-slot states stacked
 along a fresh leading slot axis, ONE ``jit(vmap)`` decode call per step)
 and looped (``max_batch`` sequential calls — the equivalence oracle).
+A :class:`~repro.serve.mesh_backend.MeshBackend` extends the vectorized
+flavor across a device mesh: the session discovers its placement hooks
+(``wave_for`` / ``place_stacked`` / ``place_rows`` / ``vmapped_prefill``)
+by ``getattr``, exactly like it discovers a ``MeteredBackend``'s meter,
+and the token stream stays bit-identical across mesh shapes
+(``tests/test_serve_mesh.py``).
 """
 
 from __future__ import annotations
@@ -178,6 +184,21 @@ class ServeSession:
         # WaveMeter; a plain backend has none and every telemetry branch
         # below reduces to one `is None` check (zero-cost when off)
         self.meter = getattr(backend, "meter", None)
+        # mesh placement is discovered the same way: a MeshBackend carries
+        # wave/placement hooks (wave_for, place_stacked, place_rows,
+        # vmapped_prefill); a plain backend has none and every branch
+        # below falls back to the single-device behaviour
+        self._backend_wave_for = getattr(backend, "wave_for", None)
+        self._place_stacked = getattr(backend, "place_stacked", None)
+        self._place_rows = getattr(backend, "place_rows", None)
+        self.mesh = getattr(backend, "mesh", None)
+        if self.meter is not None and hasattr(self.meter, "mesh_shape"):
+            # provenance stamp reflects the mesh THIS session's waves run
+            # on (None when unmeshed) — set here, not at wrapper
+            # construction, so a meter reused across sessions always
+            # reports the placement that actually executed
+            self.meter.mesh_shape = (tuple(self.mesh.devices.shape)
+                                     if self.mesh is not None else None)
         self.queue: collections.deque[StreamHandle] = collections.deque()
         self.slots: list[StreamHandle | None] = [None] * max_batch
         self.completion_order: list[int] = []
@@ -185,6 +206,10 @@ class ServeSession:
         # vectorized wave state: stacked per-slot pytree + its row signature
         self.batched = None
         self._batched_sig: tuple | None = None
+        # device-side token feedback (token-returning waves only): the
+        # previous wave's output tokens + their host copy for validation
+        self._token_feedback = None
+        self._token_feedback_np: np.ndarray | None = None
         # looped wave state: one pytree per slot
         self.states: list = [None] * max_batch
         self._wave_cache: dict[int, Any] = {}
@@ -263,9 +288,15 @@ class ServeSession:
             logits = logits[None]  # (1, 1, vocab)
         else:
             if self._vmapped_prefill is None:
-                prefill_fn = self.backend.prefill_fn
-                self._vmapped_prefill = jax.jit(
-                    jax.vmap(lambda p: prefill_fn(p[None, :])))
+                # a mesh backend supplies a donor-device group prefill (the
+                # overlap second stream); otherwise build the default
+                backend_vp = getattr(self.backend, "vmapped_prefill", None)
+                if backend_vp is not None:
+                    self._vmapped_prefill = backend_vp
+                else:
+                    prefill_fn = self.backend.prefill_fn
+                    self._vmapped_prefill = jax.jit(
+                        jax.vmap(lambda p: prefill_fn(p[None, :])))
             prompts = jnp.asarray(
                 np.stack([h.request.prompt for h in handles]), jnp.int32)
             logits, stacked = self._vmapped_prefill(prompts)
@@ -302,6 +333,10 @@ class ServeSession:
         if (self.batched is None
                 or (self._batched_sig != sig and not self.active_slots())):
             self.batched = row_shape_of()
+            if self._place_stacked is not None:
+                # born on the mesh: the admission scatter below then runs
+                # colocated with (and preserves) the wave placement
+                self.batched = self._place_stacked(self.batched)
             self._batched_sig = sig
         elif self._batched_sig != sig:
             raise ValueError(
@@ -319,6 +354,8 @@ class ServeSession:
                 lambda: jax.tree.map(
                     lambda x: jnp.zeros((self.max_batch,) + x.shape, x.dtype),
                     state))
+            if self._place_rows is not None:
+                state = self._place_rows(state)  # donor -> wave devices
             self.batched = jax.tree.map(
                 lambda big, small: big.at[slot].set(small),
                 self.batched, state)
@@ -343,10 +380,13 @@ class ServeSession:
                 lambda: jax.tree.map(
                     lambda x: jnp.zeros((self.max_batch,) + x.shape[1:],
                                         x.dtype), group.states))
+            rows = group.states
+            if self._place_rows is not None:
+                rows = self._place_rows(rows)  # d2d handoff before admission
             idx = jnp.asarray(np.asarray(slots, np.int32))
             self.batched = jax.tree.map(
                 lambda big, rows: big.at[idx].set(rows),
-                self.batched, group.states)
+                self.batched, rows)
         else:
             for j, slot in enumerate(slots):
                 self.states[slot] = jax.tree.map(lambda x: x[j], group.states)
@@ -424,7 +464,9 @@ class ServeSession:
     def _wave_for(self, fn):
         wave = self._wave_cache.get(id(fn))
         if wave is None:
-            wave = jax.jit(jax.vmap(fn))
+            wave = (self._backend_wave_for(fn)
+                    if self._backend_wave_for is not None
+                    else jax.jit(jax.vmap(fn)))
             self._wave_cache[id(fn)] = wave
         return wave
 
@@ -449,14 +491,20 @@ class ServeSession:
         if self.vectorized:
             # dispatch the wave (async), let the scheduler overlap prefill
             # work with it, then block on the results
-            logits = self._launch_vectorized(active, fn)
+            wave, out = self._launch_vectorized(active, fn)
             self.wave_in_flight = True
             try:
                 self.scheduler.overlap(self)
             finally:
                 self.wave_in_flight = False
-            next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(
-                self.max_batch, -1)[:, 0]
+            if getattr(wave, "returns_tokens", False):
+                # mesh pipeline: tokens were selected on-device (per-slot
+                # first-max, bit-identical to the host argmax below)
+                next_tok = np.asarray(out).reshape(self.max_batch, -1)[:, 0]
+                self._token_feedback_np = next_tok
+            else:
+                next_tok = np.asarray(jnp.argmax(out, axis=-1)).reshape(
+                    self.max_batch, -1)[:, 0]
         else:
             next_tok = self._run_looped(active, fn)
             self.scheduler.overlap(self)
@@ -519,12 +567,37 @@ class ServeSession:
         return views
 
     def _launch_vectorized(self, active: list[int], fn):
-        tokens = np.zeros((self.max_batch, 1, 1), np.int32)
+        """Dispatch one wave; returns (wave callable, raw device output).
+
+        The output is logits by default, or already-selected tokens when
+        the wave advertises ``returns_tokens`` (a MeshBackend fuses the
+        per-slot argmax into the wave executable so sharded logits never
+        leave their devices) — ``step`` branches on the flag when it
+        blocks on the result.
+
+        Token-returning waves also enable device-side feedback: when every
+        active slot's next input token equals what the previous wave
+        already holds on device (steady decode — no admissions between
+        waves), the previous output array is fed back directly and the
+        wave launches with zero host->device transfers. Slot rows are
+        vmapped (independent), so inactive slots' device values being
+        arbitrary cannot affect any active slot's tokens.
+        """
+        desired = np.zeros((self.max_batch,), np.int32)
         for s in active:
-            tokens[s, 0, 0] = self.slots[s].last_token
-        logits, self.batched = self._wave_for(fn)(
-            self.batched, jnp.asarray(tokens))
-        return logits
+            desired[s] = self.slots[s].last_token
+        wave = self._wave_for(fn)
+        if (self._token_feedback is not None
+                and self._token_feedback_np is not None
+                and all(desired[s] == self._token_feedback_np[s]
+                        for s in active)):
+            tok_in = self._token_feedback
+        else:
+            tok_in = jnp.asarray(desired.reshape(self.max_batch, 1, 1))
+        out, self.batched = wave(self.batched, tok_in)
+        if getattr(wave, "returns_tokens", False):
+            self._token_feedback = out  # (max_batch, 1, 1) device tokens
+        return wave, out
 
     def _run_looped(self, active: list[int], fn) -> np.ndarray:
         next_tok = np.zeros((self.max_batch,), np.int32)

@@ -128,12 +128,18 @@ class WaveMeter:
     def __init__(self, geometry: KVGeometry, *,
                  recorder: TraceRecorder | None = None,
                  energy_model: power.DRAMEnergyModel | None = None,
-                 sectored_hw: bool = True):
+                 sectored_hw: bool = True,
+                 mesh_shape: tuple[int, ...] | None = None):
         if geometry is None:
             raise ValueError(
                 "WaveMeter needs a KVGeometry: pass one explicitly or meter "
                 "a backend exposing kv_geometry() (SectoredKVBackend does)")
         self.geometry = geometry
+        # provenance only: a MeshBackend stamps the mesh it executes waves
+        # on. Energy NEVER depends on it — counters are host-side, so the
+        # cross-mesh oracle (tests/test_serve_mesh.py) can assert joules
+        # bit-identical across mesh shapes.
+        self.mesh_shape = mesh_shape
         self.recorder = recorder if recorder is not None else TraceRecorder()
         self.model = energy_model if energy_model is not None else power.DEFAULT_ENERGY
         # deployment property: False models the coarse-grained DRAM baseline
@@ -294,6 +300,8 @@ class WaveMeter:
             energy_j=self.energy_j,
             sector_coverage=fetched / valid if valid > 0 else 1.0,
             ema=dict(self.recorder.ema),
+            mesh_shape=(list(self.mesh_shape)
+                        if self.mesh_shape is not None else None),
         )
 
 
@@ -365,6 +373,17 @@ class MeteredBackend:
         meter in full-fetch accounting."""
         inner_k = getattr(self.inner, "k_for", None)
         return None if inner_k is None else inner_k(topk_frac)
+
+    def __getattr__(self, name: str):
+        # transparent decorator tail: optional hooks this class does not
+        # intercept (a MeshBackend's wave_for / place_stacked / place_rows
+        # / vmapped_prefill / mesh, a backend's kv_geometry, ...) pass
+        # through so MeteredBackend composes with other decorators in
+        # either order. Data-path identity still goes through the explicit
+        # properties above.
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self.inner, name)
 
     def __repr__(self) -> str:
         return f"MeteredBackend({self.inner!r})"

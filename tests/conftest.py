@@ -1,0 +1,58 @@
+"""Shared fixtures: forced multi-device CPU for the mesh test harness.
+
+JAX fixes its device count at backend initialization, so the only way to
+simulate a multi-device host on CPU is to set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax is
+imported. CI's ``multi-device`` job exports the flag in its environment;
+locally, either export it yourself or set ``REPRO_FORCE_DEVICES=8`` — this
+conftest runs before any test module imports jax, so the env hook below
+still catches the backend in time.
+"""
+
+import os
+import sys
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+_requested = os.environ.get("REPRO_FORCE_DEVICES")
+if (_requested and "jax" not in sys.modules
+        and _FORCE_FLAG not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" {_FORCE_FLAG}={int(_requested)}").strip()
+
+import jax  # noqa: E402  (after the env hook, deliberately)
+import pytest  # noqa: E402
+
+
+def spec_entry_axes(entry) -> tuple:
+    """Normalize one PartitionSpec entry to a tuple of mesh-axis names
+    (entries come back as None, a name, or a tuple of names depending on
+    how the spec was built). Shared by the mesh/sharding test files."""
+    if entry is None:
+        return ()
+    return tuple(entry) if isinstance(entry, tuple) else (entry,)
+
+
+def spec_axes(spec) -> list:
+    """All mesh-axis names a PartitionSpec mentions, flattened."""
+    flat = []
+    for entry in spec:
+        flat.extend(spec_entry_axes(entry))
+    return flat
+
+
+@pytest.fixture(scope="session")
+def eight_devices():
+    """Eight (possibly simulated) devices, or skip.
+
+    The cross-mesh oracle and the real-mesh sharding assertions run only
+    when the host presents >= 8 devices; on a plain single-device run they
+    skip instead of silently passing. CI's ``multi-device`` job forces the
+    count so the assertions are actually exercised there.
+    """
+    if jax.device_count() < 8:
+        pytest.skip(
+            "needs 8 devices: run with XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8 (or "
+            "REPRO_FORCE_DEVICES=8)")
+    return jax.devices()[:8]

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.models import model
@@ -388,34 +389,97 @@ def test_path_decision_topk_frac_respecialises_backend(setup):
     assert decision.merge_demands is True
 
 
-# -- demand merge with non-contiguous groups ---------------------------------
+# -- demand merge: property-based (any slot count, any group labeling) -------
+#
+# The old example-based cases (one fixed non-contiguous grouping, two fixed
+# out-of-range ids) are generalized into properties over arbitrary
+# groupings, via tests/_hypothesis_compat (real hypothesis when installed,
+# the deterministic fallback otherwise).
 
 
-def test_or_merge_demands_non_contiguous_groups():
-    """Slots {0, 3} grouped, {1, 2} singleton (gids [0, 1, 2, 0]): group
-    members get the element-wise max of the group, others are untouched."""
-    rng = np.random.default_rng(11)
-    tables = rng.random((4, 1, 1, 2, 8)).astype(np.float32)  # (S,L,B,H,P)
+def _tables_and_gids(n_slots, raw_gids, seed):
+    """Deterministic (S, L, B, H, P) score tables + in-range group ids
+    derived from drawn integers (strategies stay dependency-free: the
+    compat fallback has no flatmap/composite)."""
+    rng = np.random.default_rng(seed)
+    tables = rng.random((n_slots, 1, 1, 2, 4)).astype(np.float32)
+    gids = np.asarray([raw_gids[i % len(raw_gids)] % n_slots
+                       for i in range(n_slots)], np.int32)
+    return tables, gids
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.lists(st.integers(min_value=0, max_value=63), min_size=1,
+                max_size=6),
+       st.integers(min_value=0, max_value=2**16))
+def test_pool_demands_merged_is_superset_and_idempotent(n_slots, raw_gids,
+                                                        seed):
+    """OR-merge properties, for every grouping:
+
+    * superset — each slot's merged demand dominates EVERY member of its
+      group element-wise (max == OR on thresholded demand bits), so a
+      group fetch can never drop a page a member wanted;
+    * members of a group end up with identical demands (one fetch serves
+      the group);
+    * slots in singleton groups are untouched;
+    * idempotent — pooling an already-pooled table is a no-op (bitwise:
+      max has no rounding).
+    """
+    tables, gids = _tables_and_gids(n_slots, raw_gids, seed)
+    pooled = np.asarray(sector_predictor.pool_demands(
+        jnp.asarray(tables), gids))
+    for s in range(n_slots):
+        members = [m for m in range(n_slots) if gids[m] == gids[s]]
+        for m in members:
+            assert (pooled[s] >= tables[m]).all(), (s, m, gids)
+        np.testing.assert_array_equal(pooled[s],
+                                      tables[members].max(axis=0))
+        np.testing.assert_array_equal(pooled[s], pooled[members[0]])
+        if members == [s]:
+            np.testing.assert_array_equal(pooled[s], tables[s])
+    again = np.asarray(sector_predictor.pool_demands(
+        jnp.asarray(pooled), gids))
+    np.testing.assert_array_equal(again, pooled)  # idempotent, bitwise
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.lists(st.integers(min_value=0, max_value=63), min_size=1,
+                max_size=6),
+       st.integers(min_value=0, max_value=2**16))
+def test_or_merge_demands_pools_table_only(n_slots, raw_gids, seed):
+    """or_merge_demands = pool_demands on the table leaf; kv and position
+    pass through untouched for every grouping."""
+    tables, gids = _tables_and_gids(n_slots, raw_gids, seed)
+    kv = jnp.arange(n_slots * 2, dtype=jnp.float32).reshape(n_slots, 2)
+    position = jnp.arange(n_slots, dtype=jnp.int32)
     state = sectored_decode.SectoredState(
-        kv=jnp.zeros((4, 1)), table=jnp.asarray(tables),
-        position=jnp.zeros((4,), jnp.int32))
-    gids = jnp.asarray([0, 1, 2, 0], jnp.int32)
-    merged = np.asarray(sectored_decode.or_merge_demands(state, gids).table)
-    expect_group = np.maximum(tables[0], tables[3])
-    np.testing.assert_allclose(merged[0], expect_group)
-    np.testing.assert_allclose(merged[3], expect_group)
-    np.testing.assert_allclose(merged[1], tables[1])
-    np.testing.assert_allclose(merged[2], tables[2])
+        kv=kv, table=jnp.asarray(tables), position=position)
+    merged = sectored_decode.or_merge_demands(state, gids)
+    assert merged.kv is kv
+    np.testing.assert_array_equal(np.asarray(merged.position),
+                                  np.asarray(position))
+    np.testing.assert_array_equal(
+        np.asarray(merged.table),
+        np.asarray(sector_predictor.pool_demands(jnp.asarray(tables), gids)))
 
 
-def test_pool_demands_rejects_out_of_range_ids():
-    """Out-of-range group ids would be silently clamped by the gather —
-    pool_demands rejects them eagerly instead."""
-    table = jnp.ones((2, 3))
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=100),
+       st.booleans())
+def test_pool_demands_rejects_out_of_range_ids(n_slots, offset, negative):
+    """Any id outside [0, n_slots) — below or above, by any margin — is a
+    loud ValueError (the gather would silently clamp it into demand
+    corruption otherwise)."""
+    table = jnp.ones((n_slots, 3))
+    bad = -1 - offset if negative else n_slots + offset
+    gids = np.asarray([0] * (n_slots - 1) + [bad], np.int32)
     with pytest.raises(ValueError, match="group_ids"):
-        sector_predictor.pool_demands(table, jnp.asarray([0, 5]))
-    with pytest.raises(ValueError, match="group_ids"):
-        sector_predictor.pool_demands(table, jnp.asarray([-1, 0]))
+        sector_predictor.pool_demands(table, gids)
+    # the all-in-range control keeps passing
+    sector_predictor.pool_demands(table, np.zeros(n_slots, np.int32))
 
 
 # -- legacy shim hygiene -----------------------------------------------------

@@ -1,4 +1,12 @@
-"""Sharding rules: divisibility repair + roofline HLO parsing."""
+"""Sharding rules: divisibility repair + roofline HLO parsing.
+
+The FakeMesh tests below are shape-level only — they validate specs
+without ever placing an array, so on a single-device host nothing here
+used to prove that a real device_put honors them. The real-mesh tests at
+the bottom close that gap through the shared ``eight_devices`` fixture
+(forced device count in CI's multi-device job; skipped loudly, not
+silently, elsewhere).
+"""
 
 import jax
 import numpy as np
@@ -86,3 +94,81 @@ def test_param_shardings_cover_all_archs():
             return spec
 
         jax.tree_util.tree_map_with_path(one, shapes)
+
+
+# -- real-mesh assertions (8 forced devices; see tests/conftest.py) ----------
+
+from conftest import spec_entry_axes as _axes_of  # noqa: E402
+
+
+def test_wave_state_shardings_on_real_mesh(eight_devices):
+    """wave_state_shardings on an actual (4, 2) device mesh: slot axis
+    over 'data' on every leaf, KV page axis over 'model', and a real
+    device_put distributes the data accordingly (shard shapes checked,
+    not just specs)."""
+    import jax.numpy as jnp
+
+    from repro.launch import mesh as mesh_mod
+
+    mesh = mesh_mod.make_mesh((4, 2), ("data", "model"))
+    stacked = dict(
+        k=jnp.zeros((8, 2, 1, 512, 2, 16), jnp.bfloat16),
+        v=jnp.zeros((8, 2, 1, 512, 2, 16), jnp.bfloat16),
+        table=jnp.zeros((8, 2, 1, 2, 4), jnp.float32),
+        position=jnp.zeros((8, 1), jnp.int32),
+    )
+    shardings = sharding.wave_state_shardings(mesh, stacked)
+    for name in ("k", "v"):
+        spec = shardings[name].spec
+        assert _axes_of(spec[0]) == ("data",)
+        assert _axes_of(spec[3]) == ("model",)
+    assert _axes_of(shardings["table"].spec[0]) == ("data",)
+    assert _axes_of(shardings["position"].spec[0]) == ("data",)
+
+    placed = jax.device_put(stacked, shardings)
+    k = placed["k"]
+    assert len(k.sharding.device_set) == 8
+    shard_shapes = {s.data.shape for s in k.addressable_shards}
+    assert shard_shapes == {(2, 2, 1, 256, 2, 16)}  # slot/4, pages/2
+    # position: slot axis over data, replicated over model
+    pos_shapes = {s.data.shape for s in placed["position"].addressable_shards}
+    assert pos_shapes == {(2, 1)}
+
+    # indivisible slot axis degrades to replicated instead of erroring
+    odd = dict(position=jnp.zeros((3,), jnp.int32))
+    odd_sharding = sharding.wave_state_shardings(mesh, odd)["position"]
+    assert _axes_of(odd_sharding.spec[0] if odd_sharding.spec else None) == ()
+
+    # regression: an indivisible PAGE axis drops 'model' outright — it
+    # must never be re-homed onto another dim (fix_spec's re-placement
+    # could land it on a contraction dim and reorder float reductions,
+    # breaking the cross-mesh bitwise oracle)
+    odd_kv = dict(k=jnp.zeros((8, 2, 1, 511, 2, 16), jnp.bfloat16))
+    odd_spec = sharding.wave_state_shardings(mesh, odd_kv)["k"].spec
+    flat = [a for e in odd_spec for a in _axes_of(e)]
+    assert "model" not in flat, odd_spec
+    assert _axes_of(odd_spec[0]) == ("data",)
+
+
+def test_sectored_state_shardings_real_mesh_matches_decode_rules(
+        eight_devices):
+    """The refactored sectored_state_shardings (shared by
+    make_sectored_decode_step) keeps the decode-state placement rules on a
+    real mesh: KV batch over 'data', sequence over 'model'."""
+    from repro.launch import mesh as mesh_mod
+
+    mesh = mesh_mod.make_mesh((4, 2), ("data", "model"))
+    state_shape = dict(
+        k=jax.ShapeDtypeStruct((2, 4, 512, 2, 16), np.dtype("bfloat16")),
+        table=jax.ShapeDtypeStruct((2, 4, 2, 4), np.dtype("float32")),
+        position=jax.ShapeDtypeStruct((4,), np.dtype("int32")),
+    )
+    specs = sharding.sectored_state_shardings(mesh, state_shape)
+    assert _axes_of(specs["k"].spec[1]) == ("data",)
+    assert _axes_of(specs["k"].spec[2]) == ("model",)
+    assert _axes_of(specs["table"].spec[1]) == ("data",)
+    assert _axes_of(specs["position"].spec[0]) == ("data",)
+    # long-context: sequence over every axis, batch replicated
+    lc = sharding.sectored_state_shardings(mesh, state_shape,
+                                           long_context=True)
+    assert set(_axes_of(lc["k"].spec[2])) == {"data", "model"}

@@ -243,6 +243,47 @@ def test_adaptive_policy_narrow_widen_hold():
     assert pol.decide(0.5, {}).topk_frac == 1.0
 
 
+def test_adaptive_policy_converges_on_oscillating_coverage():
+    """Regression for the drift noted in ROADMAP's probe-page follow-up:
+    a coverage signal that merely *oscillates around* the target must not
+    walk ``topk_frac`` away from its converged value.
+
+    Phase 1 (warmup): the signal sits far below target, the policy widens
+    until the signal enters the band. Phase 2: the signal oscillates
+    around the target *inside* the deadband — the fraction must freeze
+    exactly (the deadband is the no-thrash guarantee). Phase 3: the
+    oscillation slightly exceeds the deadband on alternating sides — the
+    fraction may dither but must stay within one ``frac_step`` of its
+    converged value forever (bounded, no drift to min/max).
+    """
+    rec = _FakeRecorder()
+    pol = AdaptiveSectorPolicy(rec, target_coverage=0.7, deadband=0.1,
+                               frac_step=0.125, min_frac=0.125,
+                               max_frac=1.0, init_frac=0.25)
+    # warmup: starved coverage -> widen monotonically
+    rec.ema["attn_mass"] = 0.3
+    fracs = [pol.decide(0.5, {}).topk_frac for _ in range(4)]
+    assert fracs == sorted(fracs) and fracs[-1] > 0.25
+    converged = fracs[-1]
+
+    # oscillation INSIDE the deadband: frac must freeze bit-exactly
+    for i in range(50):
+        rec.ema["attn_mass"] = 0.7 + (0.09 if i % 2 == 0 else -0.09)
+        assert pol.decide(0.5, {}).topk_frac == converged, (
+            f"frac moved on an in-deadband oscillation at step {i}")
+
+    # oscillation just OUTSIDE the band, alternating sides: bounded dither
+    seen = set()
+    for i in range(50):
+        rec.ema["attn_mass"] = 0.7 + (0.11 if i % 2 == 0 else -0.11)
+        seen.add(pol.decide(0.5, {}).topk_frac)
+    assert max(seen) - min(seen) <= pol.frac_step + 1e-12, seen
+    assert min(seen) >= converged - pol.frac_step - 1e-12, (
+        f"frac drifted below the converged value: {sorted(seen)}")
+    assert max(seen) <= converged + pol.frac_step + 1e-12, (
+        f"frac drifted above the converged value: {sorted(seen)}")
+
+
 def test_adaptive_policy_signal_fallback_and_validation():
     # attn_mass absent: falls back to sector_coverage
     pol = AdaptiveSectorPolicy(_FakeRecorder(sector_coverage=0.95),
