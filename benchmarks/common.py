@@ -18,8 +18,12 @@ N_INSTR = 200_000
 N_MIXES = 6  # paper: 16; default trimmed for runtime (use --full for 16)
 
 #: BENCH_*.json payload schema. Bump when a writer changes field meanings
-#: (v2 added the git_commit / schema_version provenance stamp itself).
-BENCH_SCHEMA_VERSION = 2
+#: (v2 added the git_commit / schema_version provenance stamp itself;
+#: v3 re-baselined BENCH_serve on the fused single-device wave — token
+#: selection inside the wave executable — and added the ``prefused`` /
+#: ``sampled`` variants + ``fused_speedup``, so v3 tokens/sec are not
+#: comparable to the v2 host-argmax trajectory).
+BENCH_SCHEMA_VERSION = 3
 
 
 def git_commit() -> str:

@@ -7,6 +7,13 @@ HysteresisPolicy (§8.1 dynamic Sectored-off toggle).
 ``submit()`` returns a StreamHandle: tokens are read back via ``poll()`` /
 ``tokens()`` instead of the session mutating the request.
 
+The batch mixes greedy and stochastic requests: a ``SamplerSpec`` rides
+on the Request and the fused wave samples on-device with counter-based
+RNG keyed on (request_seed, position) — so two requests with the same
+prompt AND the same seed produce identical streams no matter how they
+were packed into waves, while greedy co-residents stay bit-identical to
+a greedy-only run.
+
 Run: PYTHONPATH=src python examples/serve_sectored.py
 """
 
@@ -17,7 +24,7 @@ from repro import configs
 from repro.models import model
 from repro.runtime import sectored_decode
 from repro.serve import (HysteresisPolicy, OverlapScheduler, Request,
-                         ServeSession)
+                         SamplerSpec, ServeSession)
 
 cfg = configs.get("yi-6b").reduced(n_layers=2, d_model=128, n_heads=4,
                                    n_kv_heads=2, d_ff=256, vocab=512,
@@ -25,27 +32,39 @@ cfg = configs.get("yi-6b").reduced(n_layers=2, d_model=128, n_heads=4,
 params = model.init_params(cfg, jax.random.key(0))
 
 backend = sectored_decode.make_serving_fns(cfg, params=params, seq_len=64)
-sess = ServeSession(backend, max_batch=4, scheduler=OverlapScheduler(),
+sess = ServeSession(backend, max_batch=6, scheduler=OverlapScheduler(),
                     policy=HysteresisPolicy(min_occupancy=0.5))
 
 rng = np.random.default_rng(0)
 shared_prefix = rng.integers(0, cfg.vocab, size=10).astype(np.int32)
+sampled_prompt = rng.integers(0, cfg.vocab, size=10).astype(np.int32)
+creative = SamplerSpec(temperature=0.8, top_p=0.95, seed=7)
 handles = []
-for rid in range(4):
-    # two requests share a prompt (same KV pages -> demands OR-merge),
-    # two are distinct
-    prompt = (shared_prefix if rid < 2
-              else rng.integers(0, cfg.vocab, size=10).astype(np.int32))
-    handles.append(sess.submit(Request(rid, prompt, max_new_tokens=12)))
+for rid in range(6):
+    if rid < 2:  # two greedy requests share a prompt (demands OR-merge)
+        prompt, spec = shared_prefix, None
+    elif rid < 4:  # two sampled requests share prompt AND seed
+        prompt, spec = sampled_prompt, creative
+    else:  # same prompt, two different seeds: distinct creative streams
+        prompt = sampled_prompt
+        spec = SamplerSpec(temperature=0.8, top_p=0.95, seed=100 + rid)
+    handles.append(sess.submit(Request(rid, prompt, max_new_tokens=12,
+                                       sampler=spec)))
 
 # stream request 0 token-by-token (the iterator drives the session, so the
-# other three requests decode in the same waves)
+# other five requests decode in the same mixed greedy+sampled waves)
 print("request 0 streaming:", list(handles[0].tokens()))
 stats = sess.run_until_drained()
 print("stats:", stats)
 for h in handles:
-    print(f"request {h.rid}: done={h.done} tokens={h.peek()}")
+    spec = h.request.sampler
+    desc = spec.describe() if spec is not None else "greedy"
+    print(f"request {h.rid}: done={h.done} sampler={desc:22s} "
+          f"tokens={h.peek()}")
 assert handles[0].peek() == handles[1].peek(), "identical prompts diverged"
+assert handles[2].peek() == handles[3].peek(), \
+    "same prompt + same seed must sample the same stream"
+print("seeds 104 vs 105 diverge:", handles[4].peek() != handles[5].peek())
 tbl = np.asarray(sess.batched.table)
 print("sector-history table (slot 0, layer 0, head 0):",
       np.round(tbl[0, 0, 0, 0, :6], 3))

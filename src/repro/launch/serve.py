@@ -27,9 +27,18 @@ Scheduler modes (``--scheduler``):
 ``--telemetry`` wraps the backend in a ``MeteredBackend``: every wave is
 charged against the paper's calibrated DRAM power model and an end-of-run
 energy/coverage table is printed (``--trace-out`` additionally dumps the
-per-wave trace as JSONL). ``--policy adaptive`` runs the coverage-driven
-``AdaptiveSectorPolicy`` over the meter's recorder (implies
-``--telemetry``).
+per-wave trace as JSONL; ``--bg-energy`` adds the modeled
+background/refresh component). ``--policy adaptive`` runs the
+coverage-driven ``AdaptiveSectorPolicy`` over the meter's recorder
+(implies ``--telemetry``).
+
+Sampling (``--temperature`` > 0 turns it on): each request gets a
+``SamplerSpec(temperature, top_k, top_p, seed=--seed + rid)`` — the
+per-request seed derivation is printed as a provenance column so any
+single stream can be reproduced in isolation (counter-based RNG:
+tokens depend only on (seed, position), never on batch composition,
+scheduler, or mesh shape). ``--sample-every N`` samples only every Nth
+request (default 1 = all), demonstrating mixed greedy+sampled waves.
 """
 
 from __future__ import annotations
@@ -44,6 +53,7 @@ from repro.core import metrics
 from repro.launch import mesh as mesh_mod
 from repro.models import model
 from repro.runtime import sectored_decode
+from repro.sample import SamplerSpec
 from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
                          EngineConfig, FifoScheduler, HysteresisPolicy,
                          MeshBackend, OverlapScheduler, Request, ServeSession,
@@ -99,7 +109,7 @@ def build_policy(name, recorder=None):
 def build_session(cfg, params, *, max_batch=4, sectored=True,
                   scheduler="fifo", vectorized=True, true_sectored=False,
                   seq_len=256, telemetry=False, policy="hysteresis",
-                  mesh=None) -> ServeSession:
+                  mesh=None, bg_energy=False) -> ServeSession:
     backend = build_backend(cfg, params, sectored=sectored,
                             true_sectored=true_sectored, seq_len=seq_len)
     if telemetry or policy == "adaptive":
@@ -107,7 +117,8 @@ def build_session(cfg, params, *, max_batch=4, sectored=True,
         # from the model config so the meter can convert counters to joules
         geometry = (None if true_sectored else KVGeometry.from_model_cfg(
             cfg, seq_len=seq_len, page_size=sectored_decode.PAGE_SIZE))
-        backend = MeteredBackend(backend, geometry=geometry)
+        backend = MeteredBackend(backend, geometry=geometry,
+                                 background=bg_energy)
         if policy == "adaptive" and backend.k_for(None) is None:
             # without a per-k backend the adaptive fraction would be a
             # silent no-op reported as adaptive results — refuse loudly
@@ -169,6 +180,23 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None,
                     help="with --telemetry: dump the per-wave trace JSONL "
                          "here")
+    ap.add_argument("--bg-energy", action="store_true",
+                    help="with --telemetry: add the modeled background/"
+                         "refresh energy component (deterministic, derived "
+                         "from the timing model — never wall-clock)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 (default) = greedy. "
+                         "> 0 samples every --sample-every'th request")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus truncation mass (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base RNG seed; request rid samples with seed "
+                         "(--seed + rid), printed as the provenance column")
+    ap.add_argument("--sample-every", type=int, default=1,
+                    help="sample every Nth request, leave the rest greedy "
+                         "(mixed batches share one fused wave)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="shard decode waves over a device mesh, e.g. "
                          "'4x2' (data=4, model=2) or '2' (data only); "
@@ -176,6 +204,14 @@ def main(argv=None):
                          "(simulate devices on CPU with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
+    if args.sample_every < 1:
+        ap.error("--sample-every must be >= 1")
+    if args.temperature == 0 and (args.top_k or args.top_p < 1.0
+                                  or args.seed or args.sample_every != 1):
+        # a filter/seed/stride without a temperature would silently
+        # decode greedy — refuse loudly instead of faking a sampling run
+        ap.error("--top-k/--top-p/--seed/--sample-every need "
+                 "--temperature > 0 (temperature 0 is greedy decoding)")
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -187,13 +223,22 @@ def main(argv=None):
                          vectorized=args.engine == "vectorized",
                          true_sectored=args.true_sectored,
                          telemetry=telemetry, policy=args.policy,
-                         mesh=args.mesh)
+                         mesh=args.mesh, bg_energy=args.bg_energy)
     rng = np.random.default_rng(0)
     handles = []
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=8 + rid % 5).astype(np.int32)
-        handles.append(sess.submit(Request(rid, prompt,
-                                           max_new_tokens=args.max_new_tokens)))
+        sampler = None
+        if args.temperature > 0 and rid % args.sample_every == 0:
+            # per-request seed derivation IS the provenance contract:
+            # seed = --seed + rid, printed below so any one stream can be
+            # replayed alone (counter-based RNG makes it bit-identical)
+            sampler = SamplerSpec(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.seed + rid)
+        handles.append(sess.submit(Request(
+            rid, prompt, max_new_tokens=args.max_new_tokens,
+            sampler=sampler)))
     stats = sess.run_until_drained()
     assert all(h.done for h in handles)
     mesh_tag = ("" if sess.mesh is None
@@ -206,8 +251,23 @@ def main(argv=None):
           f"overlapped_prefills={stats['overlapped_prefills']} "
           f"kv_bytes_saved_at_32k="
           f"{sectored_decode.bytes_saved_fraction(32768):.2f}")
+    if args.temperature > 0:
+        print_seed_provenance(handles, base_seed=args.seed)
     if telemetry:
         print_energy_report(sess, handles, trace_out=args.trace_out)
+
+
+def print_seed_provenance(handles, *, base_seed: int, limit: int = 16) -> None:
+    """Per-request seed provenance: how each stream's RNG identity was
+    derived, so any one of them can be replayed in isolation."""
+    print(f"-- sampling (base seed {base_seed}; per-request seed = "
+          f"base + rid) ------------------")
+    for h in handles[:limit]:
+        spec = h.request.sampler
+        desc = spec.describe() if spec is not None else "greedy"
+        print(f"  rid={h.rid:3d} sampler={desc:28s} tokens={len(h.peek())}")
+    if len(handles) > limit:
+        print(f"  ... {len(handles) - limit} more requests")
 
 
 def print_energy_report(sess, handles, *, trace_out=None) -> None:
@@ -224,9 +284,14 @@ def print_energy_report(sess, handles, *, trace_out=None) -> None:
           f"(coverage={report['sector_coverage']:.3f}, "
           f"EMA={report['ema'].get('sector_coverage', float('nan')):.3f}, "
           f"attn-mass EMA={report['ema'].get('attn_mass', float('nan')):.3f})")
+    bg = ""
+    if report["bg_j"] or report["ref_j"]:
+        bg = (f" bg={report['bg_j'] * 1e3:.3f} "
+              f"refresh={report['ref_j'] * 1e3:.3f}")
     print(f"DRAM energy: {report['energy_j'] * 1e3:.3f} mJ "
           f"(act={report['act_j'] * 1e3:.3f} rd={report['rd_j'] * 1e3:.3f} "
-          f"wr={report['wr_j'] * 1e3:.3f} prefill={report['prefill_j'] * 1e3:.3f}) "
+          f"wr={report['wr_j'] * 1e3:.3f} prefill={report['prefill_j'] * 1e3:.3f}"
+          f"{bg}) "
           f"| {metrics.dram_energy_per_token(report['energy_j'], tokens) * 1e6:.3f} uJ/token "
           f"| wall={report['wall_s']:.3f}s")
     for h in handles[:8]:

@@ -21,6 +21,13 @@ asserted in tests.
 The memory-roofline win is K*page/seq_len, reported per cell in
 EXPERIMENTS.md §Perf — the TPU equivalent of the paper's channel-byte
 savings (Fig. 14's RD/WR reduction).
+
+Serving note: the per-step functions here return raw ``(logits, state)``
+— token *selection* is not their concern. A ``ServeSession`` composes
+them into the fused wave executable (``serve.backend.make_fused_wave``:
+on-device greedy argmax or the ``repro.sample`` stochastic kernel, with
+zero-copy token feedback), which is the single- and multi-device default
+since the fused-selection pipeline was promoted out of ``MeshBackend``.
 """
 
 from __future__ import annotations
@@ -259,6 +266,11 @@ class SectoredKVBackend(ServingBackend):
     ``topk_frac`` hint gets a sectored step jitted for exactly that page
     budget (cached per distinct k), so a SectorPolicy can widen or narrow
     the fetch without rebuilding the backend.
+
+    The per-k steps stay selection-free ``(state, token) -> (logits,
+    state)`` callables: the session fuses greedy/sampled token selection
+    around them per wave (``serve.backend.fused_select_step``), so one
+    compiled sectored step serves every sampler mix.
     """
 
     def __init__(self, cfg, params, *, seq_len: int,

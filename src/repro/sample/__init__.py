@@ -1,0 +1,34 @@
+"""repro.sample — scheduler-invariant stochastic decoding.
+
+The paper's core move is making the transfer width a per-access decision
+without changing result semantics; sampling is the same discipline
+applied to token selection. The *distribution* is the contract, and the
+only state behind it is a counter-based RNG key — a pure function of
+``(request_seed, position)`` — so sampled tokens are bit-identical
+regardless of slot assignment, wave composition, scheduler, or mesh
+shape (both equivalence oracles assert this:
+``tests/test_serve_session.py`` for fifo vs. overlap,
+``tests/test_serve_mesh.py`` across mesh shapes).
+
+Three layers:
+
+* :mod:`repro.sample.spec` — :class:`SamplerSpec`, the declarative
+  per-request contract (temperature / top-k / top-p / seed; T=0 or
+  ``Request.sampler=None`` is exact legacy greedy);
+* :mod:`repro.sample.rng` — :func:`token_key`, the counter-based key
+  derivation (the ChargeCache-style per-request state table);
+* :mod:`repro.sample.kernel` — the per-slot sampling kernel shared by
+  every wave flavor, plus :class:`SamplerRows`, the stacked wave-side
+  sampler state (``serve.backend.make_fused_wave`` fuses the kernel
+  into the wave executable).
+"""
+
+from repro.sample.kernel import (SamplerRows, sample_from_logits,
+                                 sample_token, select_tokens)
+from repro.sample.rng import token_key
+from repro.sample.spec import GREEDY, SamplerSpec
+
+__all__ = [
+    "GREEDY", "SamplerRows", "SamplerSpec", "sample_from_logits",
+    "sample_token", "select_tokens", "token_key",
+]

@@ -1,0 +1,157 @@
+"""Per-slot sampling kernel + the stacked wave-side sampler state.
+
+The kernel is ONE pure function, ``sample_from_logits(logits, row)``,
+designed to run in four places without diverging by a bit:
+
+* inside the fused wave executable (``serve.backend.make_fused_wave``
+  vmaps it right after the per-slot decode step — on-device selection,
+  the promoted MeshBackend pipeline);
+* as the separate ``select_tokens`` dispatch of the pre-fused reference
+  wave (``ServeSession(fuse_wave=False)``);
+* one row at a time for the looped reference wave and for first tokens
+  at prefill/admission (``sample_token``);
+* on any mesh placement — every operation is per-slot (sort, cumsum,
+  argmax over the slot's own vocab axis), so sharding the slot axis is
+  pure data distribution.
+
+All math is f32; ties break toward the lowest index everywhere
+(stable sort, first-max argmax), matching the host ``np.argmax`` the
+greedy path always used.
+
+:class:`SamplerRows` is the wave-side state: six ``(slots,)`` scalars
+per slot (seed, position counter, temperature, top-k, top-p, greedy
+flag), stacked like the KV buffer and scattered at admission. The
+*parameters* live here as data — not as traced Python — so a mixed
+greedy+sampled batch shares one compiled wave.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sample import rng
+from repro.sample.spec import GREEDY, SamplerSpec
+
+NEG = -1e30  # matches runtime.sectored_decode.NEG_INF masking convention
+_MIN_TEMP = 1e-6  # guards the T->0 division; T == 0 takes the greedy branch
+
+
+@dataclasses.dataclass
+class SamplerRows:
+    """Stacked per-slot sampler state/config (each leaf ``(slots,)``).
+
+    ``pos`` is the counter of the NEXT token to sample — it advances by
+    one per wave for every slot, in lockstep with the token the slot
+    emits, and is rewritten at admission (the prefill token consumed
+    counter 0, so freshly admitted slots start at 1). Advancing an
+    inactive slot's counter is inert: counter-based keying means its
+    draws belong to no live request, and admission overwrites the row.
+    """
+
+    seed: jax.Array  # (S,) uint32 request RNG identity
+    pos: jax.Array  # (S,) int32 next-token counter
+    temperature: jax.Array  # (S,) f32; 0 rows take the greedy branch
+    top_k: jax.Array  # (S,) int32; 0 = off
+    top_p: jax.Array  # (S,) f32; 1.0 = off
+    greedy: jax.Array  # (S,) bool
+
+    @classmethod
+    def init(cls, n: int) -> "SamplerRows":
+        """All-greedy defaults for a fresh wave buffer."""
+        return cls.from_specs([None] * n, [0] * n)
+
+    @classmethod
+    def from_specs(cls, specs, positions) -> "SamplerRows":
+        """Rows for a list of ``SamplerSpec | None`` (None = greedy)."""
+        specs = [s if s is not None else GREEDY for s in specs]
+        return cls(
+            seed=jnp.asarray([s.seed for s in specs], jnp.uint32),
+            pos=jnp.asarray(np.asarray(positions), jnp.int32),
+            temperature=jnp.asarray([s.temperature for s in specs],
+                                    jnp.float32),
+            top_k=jnp.asarray([s.top_k for s in specs], jnp.int32),
+            top_p=jnp.asarray([s.top_p for s in specs], jnp.float32),
+            greedy=jnp.asarray([s.is_greedy for s in specs], bool),
+        )
+
+    def advance(self) -> "SamplerRows":
+        """Counters after one wave (every slot emitted one token)."""
+        return dataclasses.replace(self, pos=self.pos + 1)
+
+
+jax.tree_util.register_dataclass(
+    SamplerRows, ["seed", "pos", "temperature", "top_k", "top_p", "greedy"],
+    [])
+
+
+def _mask_top_k(scores, k):
+    """Keep the ``k`` highest scores (ties at the threshold all kept —
+    deterministic; the later argmax breaks them toward low indices)."""
+    v = scores.shape[-1]
+    kk = jnp.clip(k, 1, v)
+    thresh = jnp.sort(scores)[v - kk]
+    drop = (k > 0) & (k < v) & (scores < thresh)
+    return jnp.where(drop, NEG, scores)
+
+
+def _mask_top_p(scores, p):
+    """Nucleus truncation: keep the minimal descending-probability
+    prefix reaching mass ``p`` (a token enters the support while the
+    mass *before* it is < p, so the highest-probability token always
+    survives)."""
+    probs = jax.nn.softmax(scores)
+    order = jnp.argsort(-scores)  # stable: ties keep index order
+    sorted_probs = probs[order]
+    cum = jnp.cumsum(sorted_probs)
+    keep_sorted = (cum - sorted_probs) < p
+    keep = jnp.zeros(scores.shape, bool).at[order].set(keep_sorted)
+    drop = (p < 1.0) & ~keep
+    return jnp.where(drop, NEG, scores)
+
+
+def sample_from_logits(logits, row: SamplerRows):
+    """Token (int32 scalar) for one slot's logits under its row.
+
+    ``logits`` is the slot's ``(1, vocab)`` (or ``(vocab,)``) decode
+    output; ``row`` carries that slot's scalars. Greedy rows reduce to
+    first-max argmax; stochastic rows draw via Gumbel-max over the
+    temperature/top-k/top-p-filtered scores with the counter-based key
+    ``(row.seed, row.pos)`` — so the token depends on nothing but this
+    slot's own (logits, seed, position).
+    """
+    vec = logits.reshape(-1, logits.shape[-1])[0].astype(jnp.float32)
+    greedy_tok = jnp.argmax(vec).astype(jnp.int32)
+    scaled = vec / jnp.maximum(row.temperature.astype(jnp.float32),
+                               _MIN_TEMP)
+    scaled = _mask_top_k(scaled, row.top_k)
+    scaled = _mask_top_p(scaled, row.top_p)
+    gumbel = jax.random.gumbel(rng.token_key(row.seed, row.pos),
+                               vec.shape, jnp.float32)
+    sampled_tok = jnp.argmax(scaled + gumbel).astype(jnp.int32)
+    return jnp.where(row.greedy, greedy_tok, sampled_tok)
+
+
+@jax.jit
+def select_tokens(logits, rows: SamplerRows):
+    """Stacked selection: ``(slots, 1, vocab)`` logits + rows ->
+    ``((slots, 1, 1) int32 tokens, advanced rows)``.
+
+    This is the pre-fused reference path (one extra dispatch after the
+    logits wave) and the shape contract of the fused wave's output —
+    both vmap the same per-slot kernel, so they are bit-identical.
+    """
+    toks = jax.vmap(sample_from_logits)(logits, rows)
+    return toks.reshape(logits.shape[0], 1, 1), rows.advance()
+
+
+def sample_token(logits, spec: SamplerSpec | None, position: int = 0) -> int:
+    """One host-side draw through the same kernel (prefill first tokens,
+    looped reference wave). ``spec=None`` means greedy."""
+    row = SamplerRows.from_specs([spec], [position])
+    flat = jnp.asarray(np.asarray(logits), jnp.float32).reshape(1, -1)
+    toks, _ = select_tokens(flat, row)
+    return int(np.asarray(toks).reshape(-1)[0])

@@ -1,0 +1,43 @@
+"""Counter-based per-request RNG: the determinism mechanism of sampling.
+
+Every random draw in the serving stack comes from a key that is a pure
+function of ``(request_seed, position)`` — the request's declared seed
+and the index of the token being sampled in its own output stream.
+Nothing else enters the derivation: not the slot the request landed in,
+not which other requests share the wave, not the scheduler that admitted
+it, not the mesh shape the wave ran on.
+
+This is the ChargeCache discipline applied to randomness (Hassan et al.:
+a small per-row metadata table must survive arbitrary scheduling without
+perturbing outcomes): the only sampler state a request carries is its
+*counter* — the position of its next token — and the counter advances
+exactly once per emitted token, in lockstep with the token stream
+itself. There is no shared RNG stream to contend for, so masked or
+inactive wave slots cannot "burn" anyone's randomness by construction:
+a draw they compute is keyed on their own (stale) identity and is
+discarded with their masked output.
+
+Keys are raw threefry key arrays (``jax.random.PRNGKey``), which are
+bitwise-deterministic and vmap-invariant: deriving a batch of keys under
+``vmap`` yields exactly the per-slot keys the unbatched derivation
+yields, which is what makes the looped reference wave, the pre-fused
+vectorized wave, and the fused (mesh or single-device) wave sample
+identical tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def token_key(seed, position) -> jax.Array:
+    """PRNG key for one token draw: pure function of (seed, position).
+
+    ``seed`` is the request's uint32 identity, ``position`` the index of
+    the token being sampled in the request's output stream (the prefill
+    token is position 0, the first decode-wave token position 1, ...).
+    Both may be traced scalars — the derivation vmaps over wave slots.
+    """
+    base = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    return jax.random.fold_in(base, jnp.asarray(position, jnp.int32))

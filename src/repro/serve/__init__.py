@@ -33,11 +33,22 @@ attribution via ``StreamHandle.telemetry`` / ``energy_j``;
 ``PathDecision.topk_frac``). See the "Telemetry & energy accounting"
 section of ``docs/serving.md``.
 
+Stochastic decoding rides on :mod:`repro.sample`: a request's
+:class:`~repro.sample.SamplerSpec` (re-exported here) travels
+``Request -> submit() ->`` the wave's stacked sampler rows, selection is
+fused into the wave executable (``make_fused_wave`` — the MeshBackend
+pipeline promoted to every vectorized session), and counter-based RNG
+keys ``(request_seed, position)`` keep sampled streams bit-identical
+across schedulers, wave compositions, and mesh shapes (see the
+"Sampling" section of ``docs/serving.md``).
+
 See ``docs/serving.md`` for the full protocol reference and the mapping
 back to paper §8.1.
 """
 
-from repro.serve.backend import DecodeBackend, ServingBackend
+from repro.sample import SamplerSpec
+from repro.serve.backend import (DecodeBackend, ServingBackend,
+                                 fused_select_step, make_fused_wave)
 from repro.serve.engine import Engine, EngineConfig, LoopedEngine
 from repro.serve.mesh_backend import MeshBackend
 from repro.serve.policy import (AdaptiveSectorPolicy, AlwaysDense,
@@ -50,10 +61,12 @@ from repro.serve.session import (PrefillGroup, Request, ServeSession,
 
 __all__ = [
     "DecodeBackend", "MeshBackend", "ServingBackend",
+    "fused_select_step", "make_fused_wave",
     "Engine", "EngineConfig", "LoopedEngine",
     "AdaptiveSectorPolicy", "AlwaysDense", "AlwaysSectored",
     "HysteresisPolicy", "PathDecision", "SectorPolicy",
     "FifoScheduler", "OverlapScheduler", "Scheduler",
-    "PrefillGroup", "Request", "ServeSession", "StreamHandle",
-    "make_session", "state_signature", "stacked_row_signature",
+    "PrefillGroup", "Request", "SamplerSpec", "ServeSession",
+    "StreamHandle", "make_session", "state_signature",
+    "stacked_row_signature",
 ]

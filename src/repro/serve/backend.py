@@ -9,13 +9,29 @@ container; ``runtime.sectored_decode.make_serving_fns`` builds the
 SectoredState-backed subclass that can also re-specialize its sectored
 step for a policy-requested top-k fraction.
 
+This module also owns the **fused wave pipeline** shared by every wave
+flavor: :func:`fused_select_step` composes a per-slot decode step with
+on-device token selection (greedy first-max, or the full
+``repro.sample`` kernel), and :func:`make_fused_wave` jits its vmap —
+the single-device wave the session builds by default. This is the
+``returns_tokens`` pipeline ``serve.mesh_backend.MeshBackend``
+introduced (measured ~1.3x over host-side selection), promoted out of
+the mesh so every vectorized session inherits it; the MeshBackend now
+wraps the same ``fused_select_step`` with placement on top.
+
 This module is deliberately leaf-level: it imports nothing from
-``repro.runtime`` (the runtime imports *us* to construct backends).
+``repro.runtime`` (the runtime imports *us* to construct backends);
+``repro.sample`` is a leaf package (jax-only).
 """
 
 from __future__ import annotations
 
 from typing import Any, Callable, Iterator, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sample import SamplerRows, sample_from_logits
 
 
 @runtime_checkable
@@ -37,10 +53,19 @@ class DecodeBackend(Protocol):
     * ``k_for(topk_frac)`` — the concrete page budget a policy fraction
       resolves to, which the meter charges fetch energy for;
     * the mesh hooks a :class:`~repro.serve.mesh_backend.MeshBackend`
-      carries: ``wave_for(fn)`` (mesh-placed jitted wave),
+      carries: ``wave_for(fn, sampled=...)`` (mesh-placed jitted wave),
       ``place_stacked(stacked)`` (wave-buffer placement),
       ``place_rows(rows)`` (device-to-device admission handoff), and
       ``vmapped_prefill(prompts)`` (donor-device group prefill).
+
+    Wave contract (what ``wave_for`` must return, and what the session's
+    default :func:`make_fused_wave` builds): a callable
+    ``wave(stacked_state, tokens, sampler_rows) -> (tokens_out,
+    new_state, new_rows)`` with ``returns_tokens = True`` — token
+    selection (greedy argmax or the ``repro.sample`` kernel, chosen by
+    the ``sampled`` flag at build time) runs *inside* the wave
+    executable, so one dispatch per wave moves ``(slots,)`` int32 to the
+    host instead of ``(slots, vocab)`` logits.
     """
 
     prefill_fn: Callable
@@ -98,3 +123,62 @@ class ServingBackend:
     def __repr__(self) -> str:
         return (f"{type(self).__name__}(sectored={self.supports_sectored}, "
                 f"merge={self.demand_merge_fn is not None})")
+
+
+# -- fused wave pipeline (shared by single-device sessions + MeshBackend) ----
+
+
+def fused_select_step(fn: Callable, *, sampled: bool = False) -> Callable:
+    """Per-slot decode step with token selection fused in.
+
+    Wraps ``fn(state, token) -> (logits, new_state)`` into
+    ``fused(state, token, row) -> (tok, new_state, advanced_row)`` where
+    ``tok`` keeps the token's ``(1, 1)`` row shape so a stacked wave
+    output can feed the next wave directly (device-side token feedback).
+
+    ``sampled=False`` builds the pure greedy pipeline — per-slot
+    first-max argmax exactly like the host ``np.argmax`` it replaces,
+    and exactly the selection MeshBackend's original fused wave ran —
+    with no sampling math in the executable, so greedy-only serving
+    pays nothing for the sampler's existence. ``sampled=True`` swaps in
+    the full ``repro.sample`` kernel; its greedy *branch* is the same
+    first-max argmax, which keeps a greedy request's tokens invariant to
+    whether stochastic requests share its wave. Both flavors advance the
+    per-slot RNG counter in lockstep with the emitted token; inactive
+    slots advancing too is inert (counter-based keys mean no shared
+    stream exists to burn, and admission rewrites the row — see
+    ``repro.sample.rng``).
+    """
+    if sampled:
+        def select(logits, row: SamplerRows):
+            return sample_from_logits(logits, row)
+    else:
+        def select(logits, row: SamplerRows):
+            return jnp.argmax(
+                logits.reshape(-1, logits.shape[-1])[0]).astype(jnp.int32)
+
+    def fused(state, token, row: SamplerRows):
+        logits, new_state = fn(state, token)
+        tok = select(logits, row).reshape(1, 1)
+        return tok, new_state, row.advance()
+
+    return fused
+
+
+def make_fused_wave(fn: Callable, *, sampled: bool = False) -> Callable:
+    """Default (single-device) fused wave: ``jit(vmap)`` of
+    :func:`fused_select_step`, advertising ``returns_tokens``.
+
+    This is the promotion of MeshBackend's measured ~1.3x fused
+    pipeline to the shared vectorized path — a MeshBackend's
+    ``wave_for`` builds the same per-slot step and adds placement.
+    Memoization is the caller's job (``ServeSession._wave_for`` caches
+    per ``(id(fn), sampled)``).
+    """
+    jitted = jax.jit(jax.vmap(fused_select_step(fn, sampled=sampled)))
+
+    def wave(stacked, tokens, rows: SamplerRows):
+        return jitted(stacked, tokens, rows)
+
+    wave.returns_tokens = True
+    return wave

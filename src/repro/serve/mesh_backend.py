@@ -18,12 +18,15 @@ cheapest. The serving translation of that principle:
 
 Determinism contract (the cross-mesh oracle, ``tests/test_serve_mesh.py``):
 token streams and metered joules are **bit-identical across mesh
-shapes** — (1,), (2, 1), (4, 2) all reproduce the single-device stream.
-That holds because every cross-shard interaction this placement induces
-is pure data movement: the slot axis is vmapped (no cross-slot math), the
-page-axis shard is only ever *gathered* (the sectored/exact attend
-contracts over the gathered buffer, never over the sharded cache axis),
-and energy derives from host-side counters. Page sharding is therefore
+shapes** — (1,), (2, 1), (4, 2) all reproduce the single-device stream,
+under greedy decoding AND stochastic sampling. That holds because every
+cross-shard interaction this placement induces is pure data movement: the
+slot axis is vmapped (no cross-slot math), the page-axis shard is only
+ever *gathered* (the sectored/exact attend contracts over the gathered
+buffer, never over the sharded cache axis), energy derives from host-side
+counters, and every RNG key is a counter-based pure function of
+``(request_seed, position)`` (``repro.sample.rng``) — placement never
+enters a draw. Page sharding is therefore
 auto-enabled only for gather-based backends (those exposing ``k_for``,
 i.e. ``SectoredKVBackend``); a dense attend contracting over a sharded
 sequence axis would reorder float reductions and break the oracle.
@@ -42,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel import sharding
+from repro.serve.backend import fused_select_step
 
 
 class MeshBackend:
@@ -142,50 +146,50 @@ class MeshBackend:
 
     # -- wave execution ----------------------------------------------------
 
-    def wave_for(self, fn: Callable) -> Callable:
+    def wave_for(self, fn: Callable, *, sampled: bool = False) -> Callable:
         """Mesh-placed jitted wave for a per-slot step fn.
 
-        Mirrors the session's default ``jit(vmap(fn))`` but (a) pins the
-        stacked state and token batch to their mesh shardings before each
-        dispatch (output shardings propagate, so steady-state waves pay no
-        transfers), and (b) fuses the next-token selection into the wave
-        executable (``returns_tokens = True``): each shard argmaxes its
-        own slots' logits locally, so ONE dispatch per wave moves
-        ``(slots,)`` int32 to the host instead of a second eagerly
+        Builds the SAME fused pipeline every vectorized session runs
+        (``serve.backend.fused_select_step`` — token selection inside the
+        wave executable, ``returns_tokens = True``; ``sampled`` picks
+        greedy argmax or the ``repro.sample`` kernel) and adds placement:
+        the stacked state, token batch, and sampler rows are pinned to
+        their mesh shardings before each dispatch (output shardings
+        propagate, so steady-state waves pay no transfers). Each shard
+        selects its own slots' tokens locally, so ONE dispatch per wave
+        moves ``(slots,)`` int32 to the host instead of a second eagerly
         dispatched SPMD reduction gathering ``(slots, vocab)`` logits
-        across devices. Selection is per-slot and first-max, exactly like
-        the host-side ``np.argmax`` of the default path, so tokens stay
-        bit-identical to the unmeshed session (the cross-mesh oracle
-        covers this fused path).
+        across devices. Selection and RNG keys are per-slot pure
+        functions (first-max ties, counter-based keys), so tokens stay
+        bit-identical to the unmeshed session — greedy *and* sampled
+        (the cross-mesh oracle covers both).
 
-        Memoization is the caller's job (``ServeSession._wave_for`` caches
-        per ``id(fn)``); the identity anchors for the steady-state
-        short-circuit live in the returned closure, so two sessions
-        driving one backend cannot thrash each other's anchors.
+        Memoization is the caller's job (``ServeSession._wave_for``
+        caches per ``(id(fn), sampled)``); the identity anchors for the
+        steady-state short-circuit live in the returned closure, so two
+        sessions driving one backend cannot thrash each other's anchors.
         """
-        def fused(state, token):
-            logits, new_state = fn(state, token)
-            # keep the token's (1, 1) row shape so the stacked output
-            # can feed the next wave directly (device-side feedback)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return tok.reshape(1, 1), new_state
+        jitted = jax.jit(jax.vmap(fused_select_step(fn, sampled=sampled)))
+        last_state = last_tokens = last_rows = None
 
-        jitted = jax.jit(jax.vmap(fused))
-        last_state = last_tokens = None
-
-        def wave(stacked, tokens):
-            # identity short-circuits: a state/token array this wave
+        def wave(stacked, tokens, rows):
+            # identity short-circuits: a state/token/rows array this wave
             # itself produced is already placed — steady-state decode
             # re-enters with zero host->device transfers
-            nonlocal last_state, last_tokens
+            nonlocal last_state, last_tokens, last_rows
             if stacked is not last_state:
                 stacked = self.place_stacked(stacked)
             if tokens is not last_tokens:
                 tokens = jax.device_put(
                     tokens, self._token_sharding_for(tokens.shape))
-            out, new_state = jitted(stacked, tokens)
-            last_tokens, last_state = out, new_state
-            return out, new_state
+            if rows is not last_rows:
+                # sampler rows are a handful of (slots,) scalars:
+                # replicate (like admission handoffs) — the cost is
+                # bytes, and the per-slot selection reads only its row
+                rows = jax.device_put(rows, self._replicated)
+            out, new_state, new_rows = jitted(stacked, tokens, rows)
+            last_tokens, last_state, last_rows = out, new_state, new_rows
+            return out, new_state, new_rows
 
         wave.returns_tokens = True
         return wave

@@ -31,7 +31,11 @@ On merge-free paths (dense backends, or sectored exact mode) both
 schedulers produce token-identical output on the same request trace
 (asserted in tests/test_serve_session.py): waves are vmapped over
 independent per-slot states, so *when* a request joins a wave never
-changes *what* it generates. Under the shared-prefix demand merge a
+changes *what* it generates. This holds under stochastic sampling too —
+a sampled request's draws are keyed on (request_seed, position) only
+(``repro.sample``), so admission timing, slot choice, and wave
+composition are invisible to its stream (the sampled fifo==overlap
+oracle in tests/test_serve_session.py). Under the shared-prefix demand merge a
 slot's sector predictions CAN depend on which same-prefix slots are
 co-resident, so the guarantee there is only trace-level: both schedulers
 admit at the first step boundary with a free slot, and the sectored

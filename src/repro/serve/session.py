@@ -19,12 +19,21 @@ The session composes three pluggable protocols:
 Wave execution comes in two flavors: vectorized (per-slot states stacked
 along a fresh leading slot axis, ONE ``jit(vmap)`` decode call per step)
 and looped (``max_batch`` sequential calls — the equivalence oracle).
+The vectorized wave is **fused** by default: token selection (greedy
+argmax, or the ``repro.sample`` kernel when any active request carries a
+stochastic :class:`~repro.sample.SamplerSpec`) runs inside the wave
+executable (``serve.backend.make_fused_wave`` — the MeshBackend pipeline
+promoted to the shared path), with device-side token feedback in steady
+decode; ``fuse_wave=False`` keeps the pre-fused reference wave (logits
+out, one separate selection dispatch) for ablation/benchmarks.
 A :class:`~repro.serve.mesh_backend.MeshBackend` extends the vectorized
 flavor across a device mesh: the session discovers its placement hooks
 (``wave_for`` / ``place_stacked`` / ``place_rows`` / ``vmapped_prefill``)
 by ``getattr``, exactly like it discovers a ``MeteredBackend``'s meter,
 and the token stream stays bit-identical across mesh shapes
-(``tests/test_serve_mesh.py``).
+(``tests/test_serve_mesh.py``) — under sampling too: every RNG key is a
+pure function of ``(request_seed, position)``, never of slot, wave
+composition, scheduler, or placement (``repro.sample.rng``).
 """
 
 from __future__ import annotations
@@ -38,7 +47,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.backend import DecodeBackend, ServingBackend
+from repro.sample import SamplerRows, SamplerSpec, sample_token, select_tokens
+from repro.serve.backend import (DecodeBackend, ServingBackend,
+                                 make_fused_wave)
 from repro.serve.policy import HysteresisPolicy, SectorPolicy
 from repro.serve.scheduler import FifoScheduler, Scheduler
 
@@ -50,6 +61,9 @@ class Request:
     rid: int
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
+    # None = greedy (exact legacy token streams); a stochastic spec keys
+    # every draw on (spec.seed, token position) — see repro.sample
+    sampler: SamplerSpec | None = None
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -174,12 +188,13 @@ class ServeSession:
     def __init__(self, backend: DecodeBackend, *, max_batch: int = 8,
                  scheduler: Scheduler | None = None,
                  policy: SectorPolicy | None = None,
-                 vectorized: bool = True):
+                 vectorized: bool = True, fuse_wave: bool = True):
         self.backend = backend
         self.max_batch = max_batch
         self.scheduler = scheduler if scheduler is not None else FifoScheduler()
         self.policy = policy if policy is not None else HysteresisPolicy()
         self.vectorized = vectorized
+        self.fuse_wave = fuse_wave
         # metering is discovered, not configured: a MeteredBackend carries a
         # WaveMeter; a plain backend has none and every telemetry branch
         # below reduces to one `is None` check (zero-cost when off)
@@ -192,6 +207,11 @@ class ServeSession:
         self._place_stacked = getattr(backend, "place_stacked", None)
         self._place_rows = getattr(backend, "place_rows", None)
         self.mesh = getattr(backend, "mesh", None)
+        if not fuse_wave and self._backend_wave_for is not None:
+            raise ValueError(
+                "fuse_wave=False (the pre-fused reference wave) is a "
+                "single-device ablation; a backend supplying wave_for "
+                "(MeshBackend) always fuses token selection")
         if self.meter is not None and hasattr(self.meter, "mesh_shape"):
             # provenance stamp reflects the mesh THIS session's waves run
             # on (None when unmeshed) — set here, not at wrapper
@@ -206,13 +226,18 @@ class ServeSession:
         # vectorized wave state: stacked per-slot pytree + its row signature
         self.batched = None
         self._batched_sig: tuple | None = None
+        # stacked per-slot sampler state (seed, RNG counter, spec scalars)
+        # riding next to the wave buffer; scattered at admission, advanced
+        # on-device by every fused wave (repro.sample.SamplerRows)
+        self._sampler_rows = SamplerRows.init(max_batch) if vectorized \
+            else None
         # device-side token feedback (token-returning waves only): the
         # previous wave's output tokens + their host copy for validation
         self._token_feedback = None
         self._token_feedback_np: np.ndarray | None = None
         # looped wave state: one pytree per slot
         self.states: list = [None] * max_batch
-        self._wave_cache: dict[int, Any] = {}
+        self._wave_cache: dict[tuple, Any] = {}
         self._vmapped_prefill = None
         self.wave_in_flight = False  # True between dispatch and blocking
 
@@ -266,7 +291,16 @@ class ServeSession:
         if self.meter is not None:
             self.meter.record_prefill(handle.rid, len(handle.request.prompt),
                                       overlapped=self.wave_in_flight)
-        return int(np.argmax(np.asarray(logits[0]))), state
+        return self._first_token(handle, logits[0]), state
+
+    @staticmethod
+    def _first_token(handle: StreamHandle, logits_row) -> int:
+        """Select the prefill-emitted token (RNG counter 0 for sampled
+        requests; greedy keeps the exact legacy host argmax)."""
+        spec = handle.request.sampler
+        if spec is None or spec.is_greedy:
+            return int(np.argmax(np.asarray(logits_row)))
+        return sample_token(np.asarray(logits_row), spec, position=0)
 
     def prefill_group(self, handles: list[StreamHandle]) -> PrefillGroup:
         """One prefill call over same-length prompts, kept stacked.
@@ -359,6 +393,7 @@ class ServeSession:
             self.batched = jax.tree.map(
                 lambda big, small: big.at[slot].set(small),
                 self.batched, state)
+            self._scatter_sampler_rows([slot], [handle])
         else:
             self.states[slot] = state
         self._emit_first(slot, handle, first_token)
@@ -387,13 +422,35 @@ class ServeSession:
             self.batched = jax.tree.map(
                 lambda big, rows: big.at[idx].set(rows),
                 self.batched, rows)
+            self._scatter_sampler_rows(slots, group.handles)
         else:
             for j, slot in enumerate(slots):
                 self.states[slot] = jax.tree.map(lambda x: x[j], group.states)
-        tokens = np.asarray(jnp.argmax(group.logits, axis=-1)).reshape(
-            len(group), -1)[:, 0]
+        specs = [h.request.sampler for h in group.handles]
+        if any(s is not None and not s.is_greedy for s in specs):
+            # ONE stacked selection dispatch over the whole group through
+            # the wave kernel (counter 0); greedy rows take its greedy
+            # branch — the same first-max argmax as the path below
+            rows = SamplerRows.from_specs(specs, [0] * len(group))
+            toks, _ = select_tokens(group.logits, rows)
+            tokens = np.asarray(toks).reshape(len(group), -1)[:, 0]
+        else:
+            tokens = np.asarray(jnp.argmax(group.logits, axis=-1)).reshape(
+                len(group), -1)[:, 0]
         for j, (slot, handle) in enumerate(zip(slots, group.handles)):
             self._emit_first(slot, handle, int(tokens[j]))
+
+    def _scatter_sampler_rows(self, slots: list[int], handles) -> None:
+        """Admission scatter for the per-slot sampler state: each handle's
+        spec scalars land in its slot with the RNG counter at 1 (the
+        prefill token consumed counter 0). Rows of vacated slots stay
+        stale — counter-based keying makes them inert, and the next
+        admission rewrites them."""
+        rows = SamplerRows.from_specs(
+            [h.request.sampler for h in handles], [1] * len(handles))
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        self._sampler_rows = jax.tree.map(
+            lambda big, row: big.at[idx].set(row), self._sampler_rows, rows)
 
     def _emit_first(self, slot: int, handle: StreamHandle,
                     first_token: int) -> None:
@@ -461,14 +518,34 @@ class ServeSession:
 
     # -- wave execution ---------------------------------------------------
 
-    def _wave_for(self, fn):
-        wave = self._wave_cache.get(id(fn))
+    def _wave_for(self, fn, sampled: bool = False):
+        """The jitted wave for a per-slot step, cached per (step fn,
+        selection flavor). ``sampled`` picks the selection fused into the
+        executable: plain greedy argmax (no sampling math — greedy-only
+        waves pay nothing for the sampler's existence) or the full
+        ``repro.sample`` kernel, whose greedy branch is the same argmax —
+        so a greedy request's tokens are invariant to which flavor its
+        wave happens to compile."""
+        # pre-fused waves are selection-free (logits out), so both
+        # flavors would trace the identical jit(vmap(fn)) — collapse the
+        # cache key to avoid compiling the same executable twice
+        key = (id(fn), sampled and self.fuse_wave)
+        wave = self._wave_cache.get(key)
         if wave is None:
-            wave = (self._backend_wave_for(fn)
-                    if self._backend_wave_for is not None
-                    else jax.jit(jax.vmap(fn)))
-            self._wave_cache[id(fn)] = wave
+            if not self.fuse_wave:
+                wave = jax.jit(jax.vmap(fn))  # pre-fused reference wave
+            elif self._backend_wave_for is not None:
+                wave = self._backend_wave_for(fn, sampled=sampled)
+            else:
+                wave = make_fused_wave(fn, sampled=sampled)
+            self._wave_cache[key] = wave
         return wave
+
+    def _wave_sampled(self, active: list[int]) -> bool:
+        """True when any active slot needs stochastic selection."""
+        return any(
+            self.slots[s].request.sampler is not None
+            and not self.slots[s].request.sampler.is_greedy for s in active)
 
     def step(self) -> int:
         """Admit + one decode wave. Returns tokens produced."""
@@ -484,6 +561,7 @@ class ServeSession:
             self._merge_demands(active)
         fn = (self.backend.sectored_fn_for(decision.topk_frac)
               if use_sectored else self.backend.decode_fn)
+        sampled = self._wave_sampled(active)
         self.stats["waves"] += 1
         if use_sectored:
             self.stats["sectored_waves"] += 1
@@ -491,18 +569,33 @@ class ServeSession:
         if self.vectorized:
             # dispatch the wave (async), let the scheduler overlap prefill
             # work with it, then block on the results
-            wave, out = self._launch_vectorized(active, fn)
+            wave, out = self._launch_vectorized(active, fn, sampled)
             self.wave_in_flight = True
             try:
                 self.scheduler.overlap(self)
             finally:
                 self.wave_in_flight = False
             if getattr(wave, "returns_tokens", False):
-                # mesh pipeline: tokens were selected on-device (per-slot
-                # first-max, bit-identical to the host argmax below)
+                # fused pipeline (the default): tokens were selected
+                # on-device — per-slot first-max argmax or the sampling
+                # kernel, bit-identical to the reference paths below
                 next_tok = np.asarray(out).reshape(self.max_batch, -1)[:, 0]
                 self._token_feedback_np = next_tok
+            elif sampled:
+                # pre-fused reference (fuse_wave=False): one extra jitted
+                # dispatch applies the SAME per-slot selection kernel to
+                # the wave's logits, advancing the RNG counters exactly
+                # like the fused executable does
+                toks, self._sampler_rows = select_tokens(
+                    out, self._sampler_rows)
+                next_tok = np.asarray(toks).reshape(self.max_batch, -1)[:, 0]
             else:
+                # greedy pre-fused wave: the literal pre-fusion baseline
+                # (host argmax over the pulled logits) — the honest
+                # denominator of the benchmark's fused_speedup. Sampler
+                # counters need no advance here: greedy draws never read
+                # them, and a later-admitted stochastic request gets its
+                # counter scattered fresh at install
                 next_tok = np.asarray(jnp.argmax(out, axis=-1)).reshape(
                     self.max_batch, -1)[:, 0]
         else:
@@ -566,27 +659,31 @@ class ServeSession:
             views[s] = (np.asarray(table), np.asarray(state.position))
         return views
 
-    def _launch_vectorized(self, active: list[int], fn):
+    def _launch_vectorized(self, active: list[int], fn, sampled: bool):
         """Dispatch one wave; returns (wave callable, raw device output).
 
-        The output is logits by default, or already-selected tokens when
-        the wave advertises ``returns_tokens`` (a MeshBackend fuses the
-        per-slot argmax into the wave executable so sharded logits never
-        leave their devices) — ``step`` branches on the flag when it
-        blocks on the result.
+        The output is already-selected tokens on the default fused
+        pipeline (token selection — greedy argmax or the sampling
+        kernel — runs inside the wave executable, so logits never leave
+        the device; over a MeshBackend sharded logits never even leave
+        their shards), or raw logits on the pre-fused reference wave
+        (``fuse_wave=False``) — ``step`` branches on the wave's
+        ``returns_tokens`` flag when it blocks on the result.
 
-        Token-returning waves also enable device-side feedback: when every
-        active slot's next input token equals what the previous wave
-        already holds on device (steady decode — no admissions between
-        waves), the previous output array is fed back directly and the
-        wave launches with zero host->device transfers. Slot rows are
-        vmapped (independent), so inactive slots' device values being
-        arbitrary cannot affect any active slot's tokens.
+        Fused waves take and return the stacked sampler rows (RNG
+        counters advance on-device, one per emitted token), and enable
+        device-side token feedback: when every active slot's next input
+        token equals what the previous wave already holds on device
+        (steady decode — no admissions between waves), the previous
+        output array is fed back directly and the wave launches with
+        zero host->device transfers. Slot rows are vmapped
+        (independent), so inactive slots' device values being arbitrary
+        cannot affect any active slot's tokens.
         """
         desired = np.zeros((self.max_batch,), np.int32)
         for s in active:
             desired[s] = self.slots[s].last_token
-        wave = self._wave_for(fn)
+        wave = self._wave_for(fn, sampled)
         if (self._token_feedback is not None
                 and self._token_feedback_np is not None
                 and all(desired[s] == self._token_feedback_np[s]
@@ -594,17 +691,28 @@ class ServeSession:
             tok_in = self._token_feedback
         else:
             tok_in = jnp.asarray(desired.reshape(self.max_batch, 1, 1))
-        out, self.batched = wave(self.batched, tok_in)
         if getattr(wave, "returns_tokens", False):
+            out, self.batched, self._sampler_rows = wave(
+                self.batched, tok_in, self._sampler_rows)
             self._token_feedback = out  # (max_batch, 1, 1) device tokens
+        else:
+            out, self.batched = wave(self.batched, tok_in)
         return wave, out
 
     def _run_looped(self, active: list[int], fn) -> np.ndarray:
         next_tok = np.zeros((self.max_batch,), np.int32)
         for s in active:
-            last = jnp.asarray([[self.slots[s].last_token]], jnp.int32)
+            handle = self.slots[s]
+            last = jnp.asarray([[handle.last_token]], jnp.int32)
             logits, self.states[s] = fn(self.states[s], last)
-            next_tok[s] = int(np.argmax(np.asarray(logits[0])))
+            spec = handle.request.sampler
+            if spec is None or spec.is_greedy:
+                next_tok[s] = int(np.argmax(np.asarray(logits[0])))
+            else:
+                # same kernel, same counter: len(_tokens) tokens emitted
+                # so far == the position of the one being sampled now
+                next_tok[s] = sample_token(np.asarray(logits[0]), spec,
+                                           position=len(handle._tokens))
         return next_tok
 
     def _emit_wave(self, active: list[int], next_tok: np.ndarray,
@@ -634,10 +742,11 @@ class ServeSession:
 def make_session(backend_or_fns, *, max_batch: int = 8,
                  scheduler: Scheduler | None = None,
                  policy: SectorPolicy | None = None,
-                 vectorized: bool = True) -> ServeSession:
+                 vectorized: bool = True,
+                 fuse_wave: bool = True) -> ServeSession:
     """Convenience constructor accepting a backend or the legacy 4-tuple."""
     if isinstance(backend_or_fns, (tuple, list)):
         backend_or_fns = ServingBackend(*backend_or_fns)
     return ServeSession(backend_or_fns, max_batch=max_batch,
                         scheduler=scheduler, policy=policy,
-                        vectorized=vectorized)
+                        vectorized=vectorized, fuse_wave=fuse_wave)

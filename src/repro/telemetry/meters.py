@@ -12,7 +12,12 @@ wave is charged
 * **RD** — full-burst block reads for the pages actually moved (the
   channel-byte reduction of Fig. 14; the newest page moves only its
   written fraction — the VBL shortened burst);
-* **WR** — the one-token KV append, identical on every path.
+* **WR** — the one-token KV append, identical on every path;
+* optionally (``background=True``, off by default) **modeled
+  background/refresh** — active-standby plus tREFI-amortized refresh
+  power charged over a modeled busy window (row cycles + bus bursts
+  from ``core/timing.py``) derived from the same counters, never from
+  wall-clock.
 
 Everything is computed from *host-side counters* (slot positions the
 session already tracks, the policy's requested page budget) — never from
@@ -35,6 +40,7 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core import power
+from repro.core.sectors import BLOCK_BYTES
 from repro.telemetry.recorder import TraceRecorder
 
 
@@ -114,7 +120,7 @@ def _zero_totals() -> dict[str, float]:
                 prefill_events=0, prefill_tokens=0, overlapped_prefills=0,
                 pages_fetched=0.0, pages_valid=0.0, acts=0, sectors=0.0,
                 act_j=0.0, rd_j=0.0, wr_j=0.0, prefill_j=0.0, wall_s=0.0,
-                demand_merges=0)
+                bg_j=0.0, ref_j=0.0, busy_ns=0.0, demand_merges=0)
 
 
 class WaveMeter:
@@ -129,12 +135,22 @@ class WaveMeter:
                  recorder: TraceRecorder | None = None,
                  energy_model: power.DRAMEnergyModel | None = None,
                  sectored_hw: bool = True,
-                 mesh_shape: tuple[int, ...] | None = None):
+                 mesh_shape: tuple[int, ...] | None = None,
+                 background: bool = False):
         if geometry is None:
             raise ValueError(
                 "WaveMeter needs a KVGeometry: pass one explicitly or meter "
                 "a backend exposing kv_geometry() (SectoredKVBackend does)")
         self.geometry = geometry
+        # modeled background + refresh energy (ROADMAP follow-up): charge
+        # standby/refresh power over a *modeled* DRAM busy time derived
+        # from the same deterministic counters as everything else (row
+        # cycles + bus bursts from core/timing.py — NEVER wall-clock, so
+        # fifo/overlap and every mesh shape still report bit-identical
+        # joules for identical token streams). Off by default: it adds a
+        # workload-independent floor that dilutes the ACT/RD orderings
+        # the paper's claims are about.
+        self.background = background
         # provenance only: a MeshBackend stamps the mesh it executes waves
         # on. Energy NEVER depends on it — counters are host-side, so the
         # cross-mesh oracle (tests/test_serve_mesh.py) can assert joules
@@ -158,6 +174,32 @@ class WaveMeter:
     def request_stats(self, rid: int) -> dict[str, float] | None:
         stats = self.per_request.get(rid)
         return None if stats is None else dict(stats)
+
+    # -- background / refresh (modeled, deterministic) ---------------------
+
+    def _background_charge(self, fetch_acts: float, fetched_units: float,
+                           appended_tokens: float) -> tuple[float, float,
+                                                            float]:
+        """(busy_ns, bg_j, ref_j) for one slot's access bundle.
+
+        The busy time is a *model*, not a measurement: row cycles
+        (``acts x tRC``) plus data-bus bursts for the blocks actually
+        moved (reads + the token append), per layer — all quantities the
+        meter already derives from host-side counters, so the charge is
+        scheduler- and mesh-invariant like every other joule here.
+        Standby power is ``IDD3N``-class active background
+        (``p_background_active``); refresh is the tREFI-amortized
+        average (``p_refresh``), both over the same modeled window.
+        """
+        g, t = self.geometry, self.model.timing
+        blocks = g.n_layers * (fetched_units * g.page_kv_bytes
+                               + appended_tokens * g.token_kv_bytes) \
+            / BLOCK_BYTES
+        busy_ns = (g.n_layers * fetch_acts * t.tRC
+                   + blocks * t.full_burst_time)
+        busy_s = busy_ns * 1e-9
+        return (busy_ns, self.model.p_background_active * busy_s,
+                self.model.p_refresh * busy_s)
 
     # -- recording hooks ---------------------------------------------------
 
@@ -187,6 +229,13 @@ class WaveMeter:
         req["energy_j"] += joules
         req["prefill_tokens"] = prompt_len
         req["tokens"] += 1
+        if self.background:
+            busy_ns, bg_j, ref_j = self._background_charge(
+                fetch["acts"], valid_units, prompt_len)
+            self.totals["busy_ns"] += busy_ns
+            self.totals["bg_j"] += bg_j
+            self.totals["ref_j"] += ref_j
+            req["energy_j"] += bg_j + ref_j
 
     def record_wave(self, *, sectored: bool, k_pages: int | None,
                     slots: list[tuple[int, int, int]], wall_s: float = 0.0,
@@ -201,7 +250,7 @@ class WaveMeter:
         """
         g = self.geometry
         wave = dict(act_j=0.0, rd_j=0.0, wr_j=0.0, fetched=0.0, valid=0.0,
-                    acts=0, sectors=0.0)
+                    acts=0, sectors=0.0, bg_j=0.0, ref_j=0.0, busy_ns=0.0)
         masses = []
         for slot, rid, position in slots:
             valid_pages = min(position // g.page_size + 1, g.total_pages)
@@ -237,6 +286,13 @@ class WaveMeter:
             req["tokens"] += 1
             req["pages_fetched"] += fetched_units
             req["pages_valid"] += valid_units
+            if self.background:
+                busy_ns, bg_j, ref_j = self._background_charge(
+                    fetch["acts"], fetched_units, 1.0)
+                wave["busy_ns"] += busy_ns
+                wave["bg_j"] += bg_j
+                wave["ref_j"] += ref_j
+                req["energy_j"] += bg_j + ref_j
             if (sectored and k_pages is not None and state_views is not None
                     and slot in state_views):
                 table, _ = state_views[slot]
@@ -258,6 +314,9 @@ class WaveMeter:
         t["act_j"] += wave["act_j"]
         t["rd_j"] += wave["rd_j"]
         t["wr_j"] += wave["wr_j"]
+        t["bg_j"] += wave["bg_j"]
+        t["ref_j"] += wave["ref_j"]
+        t["busy_ns"] += wave["busy_ns"]
         t["wall_s"] += wall_s
 
         record = dict(
@@ -273,6 +332,10 @@ class WaveMeter:
             sector_coverage=(wave["fetched"] / wave["valid"]
                              if wave["valid"] > 0 else 1.0),
         )
+        if self.background:
+            record["bg_j"] = wave["bg_j"]
+            record["ref_j"] = wave["ref_j"]
+            record["busy_ns"] = wave["busy_ns"]
         if masses:
             record["attn_mass"] = float(np.mean(masses))
         self.recorder.append(record)
@@ -286,9 +349,15 @@ class WaveMeter:
         return t["act_j"] + t["rd_j"] + t["wr_j"]
 
     @property
+    def background_j(self) -> float:
+        """Modeled standby + refresh energy (0.0 unless ``background``)."""
+        return self.totals["bg_j"] + self.totals["ref_j"]
+
+    @property
     def energy_j(self) -> float:
-        """Total deterministic DRAM energy including prefill."""
-        return self.decode_j + self.totals["prefill_j"]
+        """Total deterministic DRAM energy including prefill (and the
+        modeled background/refresh component when enabled)."""
+        return self.decode_j + self.totals["prefill_j"] + self.background_j
 
     def report(self) -> dict[str, Any]:
         """Flat summary for end-of-run tables and BENCH_*.json payloads."""
@@ -323,7 +392,7 @@ class MeteredBackend:
                  recorder: TraceRecorder | None = None,
                  geometry: KVGeometry | None = None,
                  energy_model: power.DRAMEnergyModel | None = None,
-                 sectored_hw: bool = True):
+                 sectored_hw: bool = True, background: bool = False):
         self.inner = inner
         if meter is None:
             if geometry is None:
@@ -335,7 +404,8 @@ class MeteredBackend:
                 geometry = geom_fn()
             meter = WaveMeter(geometry, recorder=recorder,
                               energy_model=energy_model,
-                              sectored_hw=sectored_hw)
+                              sectored_hw=sectored_hw,
+                              background=background)
         self.meter = meter
 
     # data path: identity-stable delegation ---------------------------------

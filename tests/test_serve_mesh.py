@@ -5,7 +5,9 @@ The multi-device serving contract (see ``serve/mesh_backend.py``): a
 the paged KV over ``('data', 'model')``, prefill streams on a donor
 device, and NONE of it may change what the session generates or meters —
 token streams and per-request joules are bit-identical across mesh
-shapes (1,), (2, 1), (4, 2) for both shipped schedulers.
+shapes (1,), (2, 1), (4, 2) for both shipped schedulers, under greedy
+decoding AND stochastic sampling (counter-based RNG keys are pure
+functions of (request_seed, position) — see ``repro.sample``).
 
 Every cross-shard interaction the placement induces is pure data
 movement (vmapped slot axis, gather-only page shards, host-side energy
@@ -27,10 +29,22 @@ from repro.launch import mesh as mesh_mod
 from repro.models import model
 from repro.runtime import sectored_decode
 from repro.serve import (AlwaysSectored, FifoScheduler, MeshBackend,
-                         OverlapScheduler, Request, ServeSession)
+                         OverlapScheduler, Request, SamplerSpec,
+                         ServeSession)
 from repro.telemetry import MeteredBackend
 
 MESH_SHAPES = ("1", "2x1", "4x2")
+
+
+def _sampler_for(rid: int) -> SamplerSpec | None:
+    """Deterministic mixed-batch sampler assignment: odd rids sample
+    (distinct seeds/specs), even rids stay greedy — one fused wave
+    carries both."""
+    if rid % 2 == 0:
+        return None
+    return SamplerSpec(temperature=0.8 + 0.1 * (rid % 3),
+                       top_k=0 if rid % 4 == 1 else 16,
+                       top_p=0.95, seed=1000 + rid)
 
 
 @pytest.fixture(scope="module")
@@ -43,8 +57,11 @@ def setup():
 
 
 def _run(cfg, params, *, mesh_spec, scheduler_cls, n_requests=12,
-         max_batch=8, max_new_tokens=5, seed=3):
-    """One drained metered session; returns (tokens, joules, session)."""
+         max_batch=8, max_new_tokens=5, seed=3, sampled=False):
+    """One drained metered session; returns (tokens, joules, session).
+
+    ``sampled=True`` attaches the deterministic mixed greedy+sampled
+    specs of :func:`_sampler_for` — the stochastic arm of the oracle."""
     inner = sectored_decode.make_serving_fns(cfg, params=params, seq_len=48)
     backend = MeteredBackend(inner)
     if mesh_spec is not None:
@@ -55,7 +72,9 @@ def _run(cfg, params, *, mesh_spec, scheduler_cls, n_requests=12,
     rng = np.random.default_rng(seed)
     handles = [sess.submit(Request(
         rid, rng.integers(0, cfg.vocab, size=6).astype(np.int32),
-        max_new_tokens=max_new_tokens)) for rid in range(n_requests)]
+        max_new_tokens=max_new_tokens,
+        sampler=_sampler_for(rid) if sampled else None))
+        for rid in range(n_requests)]
     sess.run_until_drained()
     assert all(h.done for h in handles)
     tokens = {h.rid: tuple(h.peek()) for h in handles}
@@ -91,6 +110,27 @@ def test_single_device_mesh_matches_plain_backend(setup):
         assert j == ref_j  # bit-identical, not approx
         assert sess.mesh is not None
         assert sess.meter.mesh_shape == (1,)
+
+
+def test_single_device_mesh_sampled_matches_plain_backend(setup):
+    """The sampled anchor of the cross-mesh oracle, runnable on any
+    host: a (1,) mesh reproduces the unmeshed mixed greedy+sampled
+    streams and joules bit-identically (counter-based RNG keys never see
+    the placement), and the sampled arm genuinely diverges from greedy."""
+    cfg, params = setup
+    ref_t, ref_j, _ = _run(cfg, params, mesh_spec=None,
+                           scheduler_cls=OverlapScheduler, n_requests=6,
+                           sampled=True)
+    t, j, sess = _run(cfg, params, mesh_spec="1",
+                      scheduler_cls=OverlapScheduler, n_requests=6,
+                      sampled=True)
+    assert t == ref_t
+    assert j == ref_j
+    assert sess.mesh is not None
+    greedy_t, _, _ = _run(cfg, params, mesh_spec=None,
+                          scheduler_cls=OverlapScheduler, n_requests=6)
+    assert any(t[rid] != greedy_t[rid] for rid in (1, 3, 5))
+    assert all(t[rid] == greedy_t[rid] for rid in (0, 2, 4))
 
 
 def test_mesh_backend_is_transparent_decorator(setup):
@@ -150,6 +190,33 @@ def test_cross_mesh_oracle_tokens_and_joules(setup, eight_devices,
         assert sess.meter.report()["mesh_shape"] == list(shape)
         if scheduler_cls is OverlapScheduler:
             assert sess.stats["overlapped_prefills"] >= 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scheduler_cls", [FifoScheduler, OverlapScheduler],
+                         ids=["fifo", "overlap"])
+def test_cross_mesh_oracle_sampled_tokens_and_joules(setup, eight_devices,
+                                                     scheduler_cls):
+    """The sampled acceptance oracle: a mixed greedy+sampled batch (fixed
+    SamplerSpecs + seeds) produces bit-identical token streams AND
+    bit-identical per-request joules across mesh shapes (1,), (2, 1),
+    (4, 2) for both schedulers — stochastic decoding keeps every
+    guarantee the greedy oracle established, because each draw is keyed
+    only on (request_seed, position)."""
+    cfg, params = setup
+    ref_tokens, ref_joules, _ = _run(cfg, params, mesh_spec=None,
+                                     scheduler_cls=scheduler_cls,
+                                     n_requests=8, sampled=True)
+    for spec in MESH_SHAPES:
+        tokens, joules, sess = _run(cfg, params, mesh_spec=spec,
+                                    scheduler_cls=scheduler_cls,
+                                    n_requests=8, sampled=True)
+        assert tokens == ref_tokens, \
+            f"sampled token stream diverged on mesh {spec}"
+        assert joules == ref_joules, \
+            f"sampled joules diverged on mesh {spec}"
+        assert sess.meter.mesh_shape == tuple(
+            int(x) for x in spec.split("x"))
 
 
 def test_wave_buffer_lands_on_mesh_shardings(setup, eight_devices):

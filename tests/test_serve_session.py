@@ -14,7 +14,8 @@ from repro.models import model
 from repro.runtime import sector_predictor, sectored_decode
 from repro.serve import (Engine, EngineConfig, FifoScheduler,
                          HysteresisPolicy, OverlapScheduler, PathDecision,
-                         Request, ServeSession, ServingBackend, StreamHandle)
+                         Request, SamplerSpec, ServeSession, ServingBackend,
+                         StreamHandle)
 
 VOCAB = 32
 
@@ -169,6 +170,37 @@ def test_overlap_matches_fifo_on_sectored_backend(setup):
         return {h.rid: h.peek() for h in handles}
 
     assert run(FifoScheduler()) == run(OverlapScheduler())
+
+
+def test_overlap_matches_fifo_under_sampling(setup):
+    """The stochastic-decoding oracle: with a mixed greedy+sampled batch
+    on the real SectoredState backend, fifo and overlap produce
+    bit-identical token streams (counter-based RNG keys depend only on
+    (request_seed, position), never on admission timing), and a second
+    run replays the first exactly."""
+    cfg, params = setup
+
+    def run(scheduler):
+        backend = sectored_decode.make_serving_fns(cfg, params=params,
+                                                   seq_len=48)
+        sess = ServeSession(backend, max_batch=2, scheduler=scheduler,
+                            policy=HysteresisPolicy(min_occupancy=0.5))
+        rng = np.random.default_rng(5)
+        handles = []
+        for rid in range(5):
+            prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+            spec = (SamplerSpec(temperature=0.9, top_p=0.95,
+                                seed=40 + rid) if rid % 2 else None)
+            handles.append(sess.submit(Request(rid, prompt,
+                                               max_new_tokens=4,
+                                               sampler=spec)))
+        stats = sess.run_until_drained()
+        assert stats["sectored_waves"] > 0
+        return {h.rid: h.peek() for h in handles}
+
+    toks_fifo = run(FifoScheduler())
+    assert toks_fifo == run(OverlapScheduler())
+    assert toks_fifo == run(FifoScheduler())  # per-seed replay
 
 
 def test_overlap_with_sectored_backend_merges_demands(setup):

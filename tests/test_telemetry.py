@@ -178,6 +178,79 @@ def test_wave_meter_coarse_hw_charges_full_fetch():
     assert coarse.totals["pages_fetched"] == coarse.totals["pages_valid"]
 
 
+def test_background_energy_off_by_default():
+    """The modeled background/refresh component must not perturb the
+    established energy accounting unless explicitly enabled."""
+    meter = WaveMeter(GEOM)
+    meter.record_prefill(0, 12)
+    meter.record_wave(sectored=True, k_pages=1, slots=[(0, 0, 12)])
+    assert meter.totals["bg_j"] == meter.totals["ref_j"] == 0.0
+    assert meter.background_j == 0.0
+    assert meter.energy_j == meter.decode_j + meter.totals["prefill_j"]
+    assert "bg_j" not in meter.recorder.window()[-1]
+
+
+def test_background_energy_modeled_from_timing_counters():
+    """background=True charges standby + refresh power over a modeled
+    busy window derived from deterministic counters (core/timing.py),
+    never wall-clock: wall_s varies freely, joules don't move."""
+    def run(wall_s):
+        meter = WaveMeter(GEOM, background=True)
+        meter.record_prefill(0, 12)
+        for _ in range(3):
+            meter.record_wave(sectored=True, k_pages=2,
+                              slots=[(0, 0, 12), (1, 1, 12)],
+                              wall_s=wall_s)
+        return meter
+
+    fast, slow = run(0.001), run(9.9)
+    assert fast.totals["bg_j"] == slow.totals["bg_j"] > 0.0
+    assert fast.totals["ref_j"] == slow.totals["ref_j"] > 0.0
+    assert fast.totals["busy_ns"] == slow.totals["busy_ns"] > 0.0
+    # the split mirrors the power model: same modeled window, two rails
+    assert fast.totals["ref_j"] / fast.totals["bg_j"] == pytest.approx(
+        fast.model.p_refresh / fast.model.p_background_active)
+    # it is a separate component, folded into the total
+    assert fast.energy_j == pytest.approx(
+        fast.decode_j + fast.totals["prefill_j"] + fast.background_j)
+    assert fast.background_j > 0.0
+    # per-wave records carry the component; per-request attribution still
+    # sums to the meter total
+    rec = fast.recorder.window()[-1]
+    assert rec["bg_j"] > 0.0 and rec["ref_j"] > 0.0 and rec["busy_ns"] > 0.0
+    per_req = sum(fast.per_request[rid]["energy_j"] for rid in (0, 1))
+    assert per_req == pytest.approx(fast.energy_j)
+    # a sectored wave occupies DRAM for less modeled time than a dense one
+    dense = WaveMeter(GEOM, background=True)
+    dense.record_prefill(0, 12)
+    for _ in range(3):
+        dense.record_wave(sectored=False, k_pages=None,
+                          slots=[(0, 0, 12), (1, 1, 12)])
+    assert dense.totals["bg_j"] > fast.totals["bg_j"]
+
+
+def test_background_energy_scheduler_invariant():
+    """fifo and overlap report bit-identical joules with the background
+    component on — it derives from the same deterministic counters as
+    the ACT/RD/WR energy."""
+
+    def run(scheduler):
+        backend = MeteredBackend(_fake_backend(), geometry=GEOM,
+                                 background=True)
+        sess = ServeSession(backend, max_batch=2, scheduler=scheduler,
+                            policy=AlwaysSectored())
+        for rid in range(5):
+            sess.submit(Request(rid, np.arange(4, dtype=np.int32),
+                                max_new_tokens=4))
+        sess.run_until_drained()
+        return backend.meter
+
+    meter_fifo, meter_ov = run(FifoScheduler()), run(OverlapScheduler())
+    assert meter_fifo.totals["bg_j"] == meter_ov.totals["bg_j"] > 0.0
+    assert meter_fifo.energy_j == meter_ov.energy_j
+    assert meter_ov.totals["overlapped_prefills"] >= 1
+
+
 def test_attn_mass_captured_estimate():
     # concentrated mass on page 0 + the current page: k=2 captures ~all
     table = np.zeros((1, 2, 8), np.float32)
