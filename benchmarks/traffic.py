@@ -1,0 +1,367 @@
+"""Trace-driven traffic harness: closed-loop serving under load.
+
+The paper's serving claims are steady-state; deployments live under
+*traffic* — arrivals cluster, prompt/output mixes are heterogeneous, and
+the KV page budget saturates. This harness drives a ``ServeSession``
+from a synthetic arrival trace and measures what a capacity planner
+actually reads:
+
+* **TTFT** (time-to-first-token) and **TPOT** (time-per-output-token)
+  p50/p99 per request, in *session steps* — the harness's virtual clock,
+  one decode wave per tick, so latency numbers are deterministic and
+  machine-independent (wall-clock throughput is ``serve_throughput.py``'s
+  job);
+* **J/token** from the telemetry meter (the paper's energy claim under
+  load rather than steady state);
+* preemption / EOS counters: how often the KV pool evicted, how much
+  budget the stop-token contract returned.
+
+Three arrival processes (all from one seeded ``default_rng``):
+``poisson`` (exponential interarrivals), ``bursty`` (Poisson-spaced
+bursts of back-to-back arrivals — the head-of-line stressor), and
+``diurnal`` (sinusoidally modulated rate — slow load swing). Request
+shapes are drawn from a heterogeneous mix of (prompt_len,
+max_new_tokens) classes (chat-like short-prompt/long-output vs
+summarize-like long-prompt/short-output).
+
+**Determinism oracle** (run first, on the exact/dense path): the same
+trace produces bit-identical per-request token streams across
+fifo/overlap schedulers AND across an uncontended pool vs a pool small
+enough to force preemptions — eviction + resume re-prefill must be
+invisible in the streams. The preemption legs assert preemptions > 0,
+so the oracle cannot silently pass by never contending.
+
+Results land in ``BENCH_traffic.json`` (git-stamped via
+``benchmarks.common``).
+
+Run: PYTHONPATH=src python benchmarks/traffic.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import metrics
+from repro.models import model
+from repro.runtime import sectored_decode
+from repro.sample import SamplerSpec
+from repro.serve import (AlwaysDense, FifoScheduler, HysteresisPolicy,
+                         KVPagePool, OverlapScheduler, Request, ServeSession,
+                         StreamTruncated)
+from repro.telemetry import MeteredBackend
+
+try:
+    from benchmarks import common
+except ImportError:  # run as `python benchmarks/traffic.py`
+    import common
+
+SEQ_LEN = 256
+#: small pool pages so short CI-sized prompts still contend for capacity
+POOL_PAGE_SIZE = 16
+#: (prompt_len, max_new_tokens) classes with draw weights — few distinct
+#: prompt lengths on purpose: each distinct length compiles one prefill
+#: scan, and the mix still spans chat (short in / long out) vs
+#: summarize (long in / short out)
+SHAPE_MIX = (
+    ((8, 20), 0.4),   # chat: short prompt, long output
+    ((24, 6), 0.3),   # summarize: long prompt, short output
+    ((16, 12), 0.3),  # balanced
+)
+STOP_TOKENS = (5, 9)  # arbitrary ids < the reduced vocab (128)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One arrival in a traffic trace (shape only — the prompt tokens are
+    materialized deterministically from ``rid`` at submit time, so every
+    leg of the oracle sees byte-identical requests)."""
+
+    rid: int
+    arrival_step: int
+    prompt_len: int
+    max_new_tokens: int
+    stop_tokens: tuple = ()
+    sampler_seed: int | None = None  # None = greedy
+
+
+def _arrival_steps(pattern: str, n: int, rng, *,
+                   mean_interarrival: float = 2.0) -> list[int]:
+    """Integer arrival steps for ``n`` requests under an arrival process."""
+    if pattern == "poisson":
+        gaps = rng.exponential(mean_interarrival, size=n)
+    elif pattern == "bursty":
+        # Poisson-spaced bursts of 3-5 back-to-back arrivals: the whole
+        # burst lands on one step, then a long gap — the queueing stressor
+        gaps = []
+        while len(gaps) < n:
+            burst = int(rng.integers(3, 6))
+            gaps.append(rng.exponential(mean_interarrival * burst))
+            gaps.extend([0.0] * (burst - 1))
+        gaps = np.asarray(gaps[:n])
+    elif pattern == "diurnal":
+        # sinusoidally modulated rate: interarrivals stretch and compress
+        # over a slow period (the "day"), peak load ~3x the trough
+        phase = 2.0 * np.pi * np.arange(n) / max(n, 1)
+        rate_scale = 1.0 + 0.8 * np.sin(phase)
+        gaps = rng.exponential(mean_interarrival, size=n) / rate_scale
+    else:
+        raise ValueError(f"unknown arrival pattern {pattern!r}")
+    return np.floor(np.cumsum(gaps)).astype(int).tolist()
+
+
+def make_trace(pattern: str, *, n_requests: int, seed: int,
+               mean_interarrival: float = 2.0, stop_tokens=STOP_TOKENS,
+               temperature: float = 0.0,
+               sample_every: int = 3) -> list[TraceRequest]:
+    """A reproducible traffic trace: seeded arrivals + shape mix."""
+    rng = np.random.default_rng(seed)
+    steps = _arrival_steps(pattern, n_requests, rng,
+                           mean_interarrival=mean_interarrival)
+    shapes = [s for s, _ in SHAPE_MIX]
+    weights = np.asarray([w for _, w in SHAPE_MIX])
+    picks = rng.choice(len(shapes), size=n_requests,
+                       p=weights / weights.sum())
+    trace = []
+    for rid, (step, pick) in enumerate(zip(steps, picks)):
+        prompt_len, max_new = shapes[pick]
+        sampled = temperature > 0 and rid % sample_every == 0
+        trace.append(TraceRequest(
+            rid=rid, arrival_step=int(step), prompt_len=prompt_len,
+            max_new_tokens=max_new, stop_tokens=tuple(stop_tokens),
+            sampler_seed=(seed * 1000 + rid) if sampled else None))
+    return trace
+
+
+def _materialize(tr: TraceRequest, vocab: int,
+                 temperature: float) -> Request:
+    """The concrete Request for a trace entry — prompt tokens keyed on
+    ``rid`` only, so every oracle leg submits identical bytes."""
+    prompt_rng = np.random.default_rng(100_003 + tr.rid)
+    prompt = prompt_rng.integers(0, vocab, size=tr.prompt_len).astype(
+        np.int32)
+    sampler = None
+    if tr.sampler_seed is not None:
+        sampler = SamplerSpec(temperature=temperature,
+                              seed=tr.sampler_seed)
+    return Request(tr.rid, prompt, max_new_tokens=tr.max_new_tokens,
+                   sampler=sampler, stop_tokens=tr.stop_tokens)
+
+
+def run_trace(sess: ServeSession, trace: list[TraceRequest], *,
+              vocab: int, temperature: float = 0.0,
+              max_steps: int = 10_000) -> dict:
+    """Drive one session through a trace on the virtual step clock.
+
+    Each tick submits every request whose arrival step has come, then
+    runs one session step (one decode wave). Returns per-request latency
+    records plus the drained session's handles/stats.
+    """
+    pending = sorted(trace, key=lambda t: (t.arrival_step, t.rid))
+    arrival: dict[int, int] = {}
+    first_token: dict[int, int] = {}
+    finished: dict[int, int] = {}
+    handles: dict[int, object] = {}
+    i = 0
+    step = 0
+    while i < len(pending) or not sess.idle:
+        while i < len(pending) and pending[i].arrival_step <= step:
+            tr = pending[i]
+            handles[tr.rid] = sess.submit(
+                _materialize(tr, vocab, temperature))
+            arrival[tr.rid] = step
+            i += 1
+        sess.step()
+        step += 1
+        for rid, h in handles.items():
+            if rid not in first_token and h.peek():
+                first_token[rid] = step
+            if rid not in finished and h.done:
+                finished[rid] = step
+        if step > max_steps:
+            raise StreamTruncated(
+                f"trace did not drain within {max_steps} steps "
+                f"({len(finished)}/{len(trace)} requests finished)")
+    per_request = []
+    for tr in trace:
+        h = handles[tr.rid]
+        n_tok = len(h.peek())
+        ttft = first_token[tr.rid] - arrival[tr.rid]
+        tpot = ((finished[tr.rid] - first_token[tr.rid]) / (n_tok - 1)
+                if n_tok > 1 else 0.0)
+        per_request.append(dict(
+            rid=tr.rid, arrival_step=arrival[tr.rid], tokens=n_tok,
+            ttft_steps=ttft, tpot_steps=tpot, stopped=h.stopped,
+            preemptions=h.preemptions))
+    return dict(per_request=per_request, handles=handles,
+                stats=dict(sess.stats), steps=step)
+
+
+def _percentiles(values) -> dict[str, float]:
+    arr = np.asarray(list(values), dtype=float)
+    if arr.size == 0:
+        return {"p50": 0.0, "p99": 0.0}
+    return {"p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99))}
+
+
+def _make_backend(arch: str):
+    cfg = configs.get(arch).reduced(n_layers=2, d_model=64, n_heads=4,
+                                    n_kv_heads=2, d_ff=128, vocab=128,
+                                    head_dim=32)
+    params = model.init_params(cfg, jax.random.key(0))
+    backend = sectored_decode.make_serving_fns(cfg, params=params,
+                                               seq_len=SEQ_LEN, min_topk=1)
+    return cfg, backend
+
+
+def _oracle_session(backend, scheduler: str, pool_pages: int | None,
+                    max_batch: int) -> ServeSession:
+    sched = (OverlapScheduler() if scheduler == "overlap"
+             else FifoScheduler())
+    pool = (None if pool_pages is None
+            else KVPagePool(pool_pages, page_size=POOL_PAGE_SIZE))
+    # dense/exact path: the resume re-prefill is bit-identical there,
+    # which is exactly what the oracle asserts (the sectored top-k path
+    # is occupancy-dependent by design)
+    return ServeSession(backend, max_batch=max_batch, scheduler=sched,
+                        policy=AlwaysDense(), page_pool=pool)
+
+
+def run_oracle(backend, trace, *, vocab: int, temperature: float,
+               pool_pages: int, max_batch: int = 4) -> dict:
+    """Same trace, four legs: {fifo, overlap} x {unbounded, small pool}.
+
+    Asserts every leg's per-request token streams are bit-identical and
+    that both small-pool legs actually preempted (otherwise the capacity
+    half of the oracle tested nothing).
+    """
+    legs = {}
+    streams = {}
+    for scheduler in ("fifo", "overlap"):
+        for pool in (None, pool_pages):
+            name = f"{scheduler}/{'unbounded' if pool is None else pool}"
+            sess = _oracle_session(backend, scheduler, pool, max_batch)
+            out = run_trace(sess, trace, vocab=vocab,
+                            temperature=temperature)
+            legs[name] = dict(steps=out["steps"],
+                              preemptions=out["stats"]["preemptions"],
+                              eos_stops=out["stats"]["eos_stops"])
+            streams[name] = {rid: tuple(h.peek())
+                             for rid, h in out["handles"].items()}
+    names = list(streams)
+    base = streams[names[0]]
+    for name in names[1:]:
+        if streams[name] != base:
+            diff = [rid for rid in base if streams[name][rid] != base[rid]]
+            raise SystemExit(
+                f"FAIL: token streams diverge between {names[0]} and "
+                f"{name} (rids {diff[:8]})")
+    contended = [n for n in names if not n.endswith("unbounded")]
+    for name in contended:
+        if legs[name]["preemptions"] == 0:
+            raise SystemExit(
+                f"FAIL: oracle leg {name} never preempted — shrink the "
+                f"pool so the capacity oracle actually contends")
+    return legs
+
+
+def run_metered(backend, trace, *, vocab: int, temperature: float,
+                pool_pages: int | None, scheduler: str = "overlap",
+                max_batch: int = 4) -> dict:
+    """One metered leg: latency percentiles + J/token for the report."""
+    metered = MeteredBackend(backend)
+    sched = (OverlapScheduler() if scheduler == "overlap"
+             else FifoScheduler())
+    pool = (None if pool_pages is None
+            else KVPagePool(pool_pages, page_size=POOL_PAGE_SIZE))
+    sess = ServeSession(metered, max_batch=max_batch, scheduler=sched,
+                        policy=HysteresisPolicy(), page_pool=pool)
+    out = run_trace(sess, trace, vocab=vocab, temperature=temperature)
+    report = metered.meter.report()
+    recs = out["per_request"]
+    stats = out["stats"]
+    return dict(
+        n_requests=len(trace), steps=out["steps"],
+        tokens=report["tokens"],
+        ttft_steps=_percentiles(r["ttft_steps"] for r in recs),
+        tpot_steps=_percentiles(r["tpot_steps"] for r in recs),
+        j_per_token=metrics.dram_energy_per_token(report["energy_j"],
+                                                  report["tokens"]),
+        energy_j=report["energy_j"],
+        preemptions=stats["preemptions"], eos_stops=stats["eos_stops"],
+        resumed_prefills=report["resumed_prefills"],
+        evicted_pages=report["evicted_pages"],
+        stopped_requests=sum(1 for r in recs if r["stopped"]),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized trace (fewer requests, two patterns)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.7,
+                    help="every 3rd request samples at this temperature "
+                         "(0 = all-greedy traces)")
+    ap.add_argument("--pool-pages", type=int, default=5,
+                    help="small-pool capacity for the contended legs "
+                         f"(pages of {POOL_PAGE_SIZE} tokens); must be "
+                         "tight enough that the trace actually preempts "
+                         "(the oracle refuses a contention-free run)")
+    ap.add_argument("--out", default="BENCH_traffic.json")
+    args = ap.parse_args(argv)
+
+    n_requests = 10 if args.smoke else 24
+    patterns = (("poisson", "bursty") if args.smoke
+                else ("poisson", "bursty", "diurnal"))
+    cfg, backend = _make_backend(args.arch)
+
+    # determinism oracle first: scheduler- and preemption-invariance of
+    # the token streams on the exact path, on the poisson trace
+    oracle_trace = make_trace("poisson", n_requests=n_requests,
+                              seed=args.seed, temperature=args.temperature)
+    oracle = run_oracle(backend, oracle_trace, vocab=cfg.vocab,
+                        temperature=args.temperature,
+                        pool_pages=args.pool_pages)
+    print("oracle: token streams bit-identical across "
+          f"{', '.join(oracle)} "
+          f"(contended preemptions: "
+          + ", ".join(str(v['preemptions'])
+                      for k, v in oracle.items()
+                      if not k.endswith('unbounded')) + ")")
+
+    results = {}
+    for pattern in patterns:
+        trace = make_trace(pattern, n_requests=n_requests, seed=args.seed,
+                           temperature=args.temperature)
+        results[pattern] = run_metered(backend, trace, vocab=cfg.vocab,
+                                       temperature=args.temperature,
+                                       pool_pages=args.pool_pages)
+        r = results[pattern]
+        print(f"{pattern:8s} ttft p50/p99: {r['ttft_steps']['p50']:5.1f}/"
+              f"{r['ttft_steps']['p99']:5.1f} steps  "
+              f"tpot p50/p99: {r['tpot_steps']['p50']:4.2f}/"
+              f"{r['tpot_steps']['p99']:4.2f}  "
+              f"{r['j_per_token'] * 1e6:7.3f} uJ/tok  "
+              f"preempt={r['preemptions']} eos={r['eos_stops']}")
+
+    payload = dict(
+        arch=cfg.name, smoke=args.smoke, seed=args.seed,
+        temperature=args.temperature, n_requests=n_requests,
+        pool_pages=args.pool_pages, pool_page_size=POOL_PAGE_SIZE,
+        shape_mix=[dict(prompt_len=s[0], max_new_tokens=s[1], weight=w)
+                   for s, w in SHAPE_MIX],
+        oracle=oracle, patterns=results,
+    )
+    out = common.write_bench_json(args.out, payload)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -56,8 +56,8 @@ from repro.runtime import sectored_decode
 from repro.sample import SamplerSpec
 from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
                          EngineConfig, FifoScheduler, HysteresisPolicy,
-                         MeshBackend, OverlapScheduler, Request, ServeSession,
-                         ServingBackend)
+                         KVPagePool, MeshBackend, OverlapScheduler, Request,
+                         ServeSession, ServingBackend)
 from repro.serve import engine as engine_mod  # noqa: F401  (legacy re-export)
 from repro.telemetry import KVGeometry, MeteredBackend
 
@@ -109,7 +109,8 @@ def build_policy(name, recorder=None):
 def build_session(cfg, params, *, max_batch=4, sectored=True,
                   scheduler="fifo", vectorized=True, true_sectored=False,
                   seq_len=256, telemetry=False, policy="hysteresis",
-                  mesh=None, bg_energy=False) -> ServeSession:
+                  mesh=None, bg_energy=False,
+                  page_pool: KVPagePool | None = None) -> ServeSession:
     backend = build_backend(cfg, params, sectored=sectored,
                             true_sectored=true_sectored, seq_len=seq_len)
     if telemetry or policy == "adaptive":
@@ -139,7 +140,8 @@ def build_session(cfg, params, *, max_batch=4, sectored=True,
         backend = MeshBackend(backend, mesh_obj)
     sched = OverlapScheduler() if scheduler == "overlap" else FifoScheduler()
     return ServeSession(backend, max_batch=max_batch, scheduler=sched,
-                        policy=pol, vectorized=vectorized)
+                        policy=pol, vectorized=vectorized,
+                        page_pool=page_pool)
 
 
 def build_engine(cfg, params, max_batch=4, sectored=True, *,
@@ -197,6 +199,20 @@ def main(argv=None):
     ap.add_argument("--sample-every", type=int, default=1,
                     help="sample every Nth request, leave the rest greedy "
                          "(mixed batches share one fused wave)")
+    ap.add_argument("--stop-token", type=int, action="append", default=None,
+                    metavar="ID", dest="stop_tokens",
+                    help="EOS contract: a request finishes the moment it "
+                         "emits this token id (repeatable, up to 8); the "
+                         "stop token is emitted, nothing after it, and the "
+                         "slot's KV pages free immediately")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="KV page pool capacity (pages); admission waits "
+                         "when full and mid-stream growth preempts the "
+                         "youngest-admitted requests (they resume "
+                         "bit-identically). Default: unbounded")
+    ap.add_argument("--kv-page-size", type=int, default=None,
+                    help="tokens per pool page (default: the sectored "
+                         "runtime's page quantum)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="shard decode waves over a device mesh, e.g. "
                          "'4x2' (data=4, model=2) or '2' (data only); "
@@ -213,17 +229,27 @@ def main(argv=None):
         ap.error("--top-k/--top-p/--seed/--sample-every need "
                  "--temperature > 0 (temperature 0 is greedy decoding)")
 
+    if args.kv_page_size is not None and args.kv_pages is None:
+        ap.error("--kv-page-size needs --kv-pages (an unbounded pool has "
+                 "no page granularity to configure)")
+
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params = model.init_params(cfg, jax.random.key(0))
     telemetry = args.telemetry or args.policy == "adaptive"
+    page_pool = None
+    if args.kv_pages is not None:
+        pool_kwargs = ({} if args.kv_page_size is None
+                       else dict(page_size=args.kv_page_size))
+        page_pool = KVPagePool(args.kv_pages, **pool_kwargs)
     sess = build_session(cfg, params, max_batch=args.max_batch,
                          scheduler=args.scheduler,
                          vectorized=args.engine == "vectorized",
                          true_sectored=args.true_sectored,
                          telemetry=telemetry, policy=args.policy,
-                         mesh=args.mesh, bg_energy=args.bg_energy)
+                         mesh=args.mesh, bg_energy=args.bg_energy,
+                         page_pool=page_pool)
     rng = np.random.default_rng(0)
     handles = []
     for rid in range(args.requests):
@@ -238,17 +264,22 @@ def main(argv=None):
                                   seed=args.seed + rid)
         handles.append(sess.submit(Request(
             rid, prompt, max_new_tokens=args.max_new_tokens,
-            sampler=sampler)))
+            sampler=sampler,
+            stop_tokens=tuple(args.stop_tokens or ()))))
     stats = sess.run_until_drained()
     assert all(h.done for h in handles)
     mesh_tag = ("" if sess.mesh is None
                 else f"mesh={'x'.join(map(str, sess.mesh.devices.shape))} ")
+    pool_tag = ("" if sess.page_pool is None
+                else f"preemptions={stats['preemptions']} "
+                     f"kv_peak_pages={sess.page_pool.peak_pages} ")
     print(f"arch={cfg.name} engine={args.engine} scheduler={args.scheduler} "
           f"{mesh_tag}completed={stats['completed']} "
           f"decode_steps={stats['decode_steps']} waves={stats['waves']} "
           f"sectored_steps={stats['sectored_steps']} "
           f"merged_slots={stats['merged_slots']} "
           f"overlapped_prefills={stats['overlapped_prefills']} "
+          f"eos_stops={stats['eos_stops']} {pool_tag}"
           f"kv_bytes_saved_at_32k="
           f"{sectored_decode.bytes_saved_fraction(32768):.2f}")
     if args.temperature > 0:

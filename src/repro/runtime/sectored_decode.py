@@ -289,7 +289,7 @@ class SectoredKVBackend(ServingBackend):
         exact_fn = self._step_for(self.pages)  # every page: exact mode
         super().__init__(self._prefill, exact_fn,
                          self._step_for(self.k_for(topk_frac)),
-                         or_merge_demands)
+                         or_merge_demands, vocab=cfg.vocab)
 
     def _step_for(self, k_pages: int):
         fn = self._k_cache.get(k_pages)

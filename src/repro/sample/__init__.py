@@ -23,12 +23,13 @@ Three layers:
   into the wave executable).
 """
 
-from repro.sample.kernel import (SamplerRows, sample_from_logits,
-                                 sample_token, select_tokens)
+from repro.sample.kernel import (MAX_STOP_TOKENS, NO_STOP, SamplerRows,
+                                 sample_from_logits, sample_token,
+                                 select_tokens)
 from repro.sample.rng import token_key
 from repro.sample.spec import GREEDY, SamplerSpec
 
 __all__ = [
-    "GREEDY", "SamplerRows", "SamplerSpec", "sample_from_logits",
-    "sample_token", "select_tokens", "token_key",
+    "GREEDY", "MAX_STOP_TOKENS", "NO_STOP", "SamplerRows", "SamplerSpec",
+    "sample_from_logits", "sample_token", "select_tokens", "token_key",
 ]

@@ -39,6 +39,13 @@ from repro.sample.spec import GREEDY, SamplerSpec
 NEG = -1e30  # matches runtime.sectored_decode.NEG_INF masking convention
 _MIN_TEMP = 1e-6  # guards the T->0 division; T == 0 takes the greedy branch
 
+#: Per-slot stop-token table width. Each slot's row carries up to this many
+#: stop ids, padded with NO_STOP; ``ServeSession.submit`` rejects longer
+#: ``Request.stop_tokens`` so the wave-side mask and the host-side stop set
+#: can never disagree about which tokens terminate a request.
+MAX_STOP_TOKENS = 8
+NO_STOP = -1  # padding value; emitted tokens are always >= 0
+
 
 @dataclasses.dataclass
 class SamplerRows:
@@ -58,6 +65,10 @@ class SamplerRows:
     top_k: jax.Array  # (S,) int32; 0 = off
     top_p: jax.Array  # (S,) f32; 1.0 = off
     greedy: jax.Array  # (S,) bool
+    # (S, MAX_STOP_TOKENS) int32 per-slot stop set, NO_STOP-padded — the
+    # wave-side EOS mask (serve.backend.fused_select_step). Data, not
+    # traced Python, so stop/no-stop batches share one compiled wave.
+    stop: jax.Array
 
     @classmethod
     def init(cls, n: int) -> "SamplerRows":
@@ -65,9 +76,18 @@ class SamplerRows:
         return cls.from_specs([None] * n, [0] * n)
 
     @classmethod
-    def from_specs(cls, specs, positions) -> "SamplerRows":
-        """Rows for a list of ``SamplerSpec | None`` (None = greedy)."""
+    def from_specs(cls, specs, positions, stops=None) -> "SamplerRows":
+        """Rows for a list of ``SamplerSpec | None`` (None = greedy).
+
+        ``stops`` is an optional parallel list of per-request stop-token
+        iterables (None / empty = never stops); each is padded to the
+        fixed ``MAX_STOP_TOKENS`` width with ``NO_STOP``.
+        """
         specs = [s if s is not None else GREEDY for s in specs]
+        stop = np.full((len(specs), MAX_STOP_TOKENS), NO_STOP, np.int32)
+        for i, toks in enumerate(stops or []):
+            for j, tok in enumerate(toks or ()):
+                stop[i, j] = int(tok)
         return cls(
             seed=jnp.asarray([s.seed for s in specs], jnp.uint32),
             pos=jnp.asarray(np.asarray(positions), jnp.int32),
@@ -76,15 +96,26 @@ class SamplerRows:
             top_k=jnp.asarray([s.top_k for s in specs], jnp.int32),
             top_p=jnp.asarray([s.top_p for s in specs], jnp.float32),
             greedy=jnp.asarray([s.is_greedy for s in specs], bool),
+            stop=jnp.asarray(stop),
         )
 
-    def advance(self) -> "SamplerRows":
-        """Counters after one wave (every slot emitted one token)."""
-        return dataclasses.replace(self, pos=self.pos + 1)
+    def advance(self, hold=None) -> "SamplerRows":
+        """Counters after one wave (every slot emitted one token).
+
+        ``hold`` optionally masks slots whose counter must NOT move — the
+        fused wave's stop guard freezes a stopped slot's token and counter
+        together, so the RNG position stays in lockstep with the tokens
+        actually emitted (a desynced counter would silently reseed any
+        continued stream)."""
+        if hold is None:
+            return dataclasses.replace(self, pos=self.pos + 1)
+        step = jnp.where(hold, 0, 1).astype(self.pos.dtype)
+        return dataclasses.replace(self, pos=self.pos + step)
 
 
 jax.tree_util.register_dataclass(
-    SamplerRows, ["seed", "pos", "temperature", "top_k", "top_p", "greedy"],
+    SamplerRows,
+    ["seed", "pos", "temperature", "top_k", "top_p", "greedy", "stop"],
     [])
 
 

@@ -54,10 +54,11 @@ from repro.serve.mesh_backend import MeshBackend
 from repro.serve.policy import (AdaptiveSectorPolicy, AlwaysDense,
                                 AlwaysSectored, HysteresisPolicy,
                                 PathDecision, SectorPolicy)
+from repro.serve.pool import KVPagePool
 from repro.serve.scheduler import FifoScheduler, OverlapScheduler, Scheduler
 from repro.serve.session import (PrefillGroup, Request, ServeSession,
-                                 StreamHandle, make_session, state_signature,
-                                 stacked_row_signature)
+                                 StreamHandle, StreamTruncated, make_session,
+                                 state_signature, stacked_row_signature)
 
 __all__ = [
     "DecodeBackend", "MeshBackend", "ServingBackend",
@@ -65,8 +66,8 @@ __all__ = [
     "Engine", "EngineConfig", "LoopedEngine",
     "AdaptiveSectorPolicy", "AlwaysDense", "AlwaysSectored",
     "HysteresisPolicy", "PathDecision", "SectorPolicy",
-    "FifoScheduler", "OverlapScheduler", "Scheduler",
+    "FifoScheduler", "KVPagePool", "OverlapScheduler", "Scheduler",
     "PrefillGroup", "Request", "SamplerSpec", "ServeSession",
-    "StreamHandle", "make_session", "state_signature",
+    "StreamHandle", "StreamTruncated", "make_session", "state_signature",
     "stacked_row_signature",
 ]

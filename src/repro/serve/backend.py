@@ -90,11 +90,16 @@ class ServingBackend:
 
     def __init__(self, prefill_fn: Callable, decode_fn: Callable,
                  sectored_fn: Callable | None = None,
-                 demand_merge_fn: Callable | None = None):
+                 demand_merge_fn: Callable | None = None, *,
+                 vocab: int | None = None):
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
         self.sectored_fn = sectored_fn
         self.demand_merge_fn = demand_merge_fn
+        # vocabulary bound, when known — ServeSession.submit uses it to
+        # reject stop tokens that could never match an emitted token
+        # (SectoredKVBackend supplies cfg.vocab; None = unvalidated)
+        self.vocab = vocab
 
     @property
     def supports_sectored(self) -> bool:
@@ -148,6 +153,21 @@ def fused_select_step(fn: Callable, *, sampled: bool = False) -> Callable:
     slots advancing too is inert (counter-based keys mean no shared
     stream exists to burn, and admission rewrites the row — see
     ``repro.sample.rng``).
+
+    **Stop mask** (the EOS contract, folded into the wave): each row
+    carries its request's ``stop`` token set (``SamplerRows.stop``,
+    ``NO_STOP``-padded). A slot whose *input* token — the one it emitted
+    last wave, possibly fed back device-side — hits its stop set is
+    finished: the guard re-emits that stop token unchanged and holds the
+    slot's RNG counter (``advance(hold)``), so a completed slot can
+    never emit a post-EOS token nor burn RNG positions, no matter how
+    long host bookkeeping leaves it resident. The session normally
+    vacates a stopped slot before the next wave (freeing its KV pages),
+    so in steady state the guard is the wave-level enforcement of what
+    the host already did — which is exactly why it must freeze token
+    and counter *together*: the pre-fused reference wave
+    (``fuse_wave=False``) relies on host-side vacating alone, and any
+    counter drift between the two flavors would desync their streams.
     """
     if sampled:
         def select(logits, row: SamplerRows):
@@ -160,7 +180,9 @@ def fused_select_step(fn: Callable, *, sampled: bool = False) -> Callable:
     def fused(state, token, row: SamplerRows):
         logits, new_state = fn(state, token)
         tok = select(logits, row).reshape(1, 1)
-        return tok, new_state, row.advance()
+        stopped = jnp.any(token.reshape(-1)[-1] == row.stop)
+        tok = jnp.where(stopped, token.reshape(1, 1), tok)
+        return tok, new_state, row.advance(hold=stopped)
 
     return fused
 

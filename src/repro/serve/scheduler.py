@@ -75,14 +75,26 @@ class Scheduler(Protocol):
 
 
 class FifoScheduler:
-    """Head-of-queue admission with blocking prefill (legacy behaviour)."""
+    """Head-of-queue admission with blocking prefill (legacy behaviour).
+
+    With a session :class:`~repro.serve.pool.KVPagePool`, admission is
+    additionally pool-gated: overcommit from the previous wave's growth
+    is unwound first (``session.preempt_overcommitted`` — victims land
+    back at the queue front), then the queue head admits only while its
+    current KV need fits the pool. A blocked head pauses ALL admission
+    (strict FIFO — no overtaking), which is what lets a preempted
+    request resume before later arrivals.
+    """
 
     name = "fifo"
 
     def schedule(self, session) -> None:
+        session.preempt_overcommitted()
         for slot in session.free_slots():
             if not session.queue:
                 break
+            if not session.pool_admits(session.queue[0]):
+                break  # pool full: wait for resident streams to drain
             handle = session.queue.popleft()
             token, state = session.prefill_one(handle)
             session.install(slot, handle, token, state)
@@ -115,6 +127,7 @@ class OverlapScheduler:
         return sum(len(group) for group in self._ready)
 
     def schedule(self, session) -> None:
+        session.preempt_overcommitted()
         self._install_ready(session)
         if not session.active_slots() and not self._ready and session.queue:
             # cold start: no wave in flight to overlap with — prefill
@@ -143,15 +156,20 @@ class OverlapScheduler:
         # shrinks, the wave drains, and the head is then accepted against
         # an empty wave. Each group installs as ONE multi-slot scatter; a
         # group larger than the free slots is split and its tail keeps its
-        # place in line.
+        # place in line. A session page pool gates the same way: only the
+        # group prefix the pool can hold right now installs; a fully
+        # blocked head pauses admission until resident streams drain.
         free = session.free_slots()
         while self._ready and free:
             group = self._ready[0]
             if not session.wave_accepts(group.sig):
                 break
+            n = min(len(free), session.pool_admit_count(group.handles))
+            if n == 0:
+                break  # pool full: wait for resident streams to drain
             self._ready.popleft()
-            if len(group) > len(free):
-                group, tail = session.split_group(group, len(free))
+            if len(group) > n:
+                group, tail = session.split_group(group, n)
                 self._ready.appendleft(tail)
             session.install_group(free[:len(group)], group)
             free = free[len(group):]
@@ -163,12 +181,13 @@ class OverlapScheduler:
             taken.append(session.queue.popleft())
         if not taken:
             return 0
-        # one stacked (vmapped) prefill per prompt-length run, split at
-        # length changes so admission order follows submission order
+        # one stacked (vmapped) prefill per length run, split at length
+        # changes so admission order follows submission order; lengths
+        # are EFFECTIVE (prompt + generated) so a preempted request's
+        # resume re-prefill groups correctly
         runs: list[list] = []
         for handle in taken:
-            if runs and len(runs[-1][0].request.prompt) == len(
-                    handle.request.prompt):
+            if runs and runs[-1][0].prefill_len == handle.prefill_len:
                 runs[-1].append(handle)
             else:
                 runs.append([handle])

@@ -34,6 +34,26 @@ and the token stream stays bit-identical across mesh shapes
 (``tests/test_serve_mesh.py``) — under sampling too: every RNG key is a
 pure function of ``(request_seed, position)``, never of slot, wave
 composition, scheduler, or placement (``repro.sample.rng``).
+
+Two serving-contract layers ride on top (docs/serving.md "Traffic &
+capacity"):
+
+* **EOS** — ``Request.stop_tokens``: a request finishes the moment it
+  emits a stop token, freeing its slot (and KV pages) instead of
+  burning the remaining ``max_new_tokens`` budget. The stop set also
+  travels into the wave executable as a per-slot mask
+  (``SamplerRows.stop`` + the guard in
+  ``serve.backend.fused_select_step``), so the fused wave itself can
+  never emit past EOS nor advance a finished slot's RNG counter.
+* **Capacity** — an optional :class:`~repro.serve.pool.KVPagePool`
+  bounds total resident KV pages. Admission waits (degrades) when the
+  pool is full; mid-stream growth past the budget preempts the
+  youngest-admitted requests (``preempt_overcommitted``, driven by the
+  schedulers), which requeue at the queue front in submission order
+  and later *resume*: re-prefill over ``prompt + generated`` rebuilds
+  their state, and counter-keyed RNG restarts sampling at position
+  ``len(generated)`` — so on the exact decode path a preempted
+  request's stream is bit-identical to an uncontended run.
 """
 
 from __future__ import annotations
@@ -47,13 +67,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sample import SamplerRows, SamplerSpec, sample_token, select_tokens
+from repro.sample import (MAX_STOP_TOKENS, SamplerRows, SamplerSpec,
+                          sample_token, select_tokens)
 from repro.serve.backend import (DecodeBackend, ServingBackend,
                                  make_fused_wave)
 from repro.serve.policy import HysteresisPolicy, SectorPolicy
+from repro.serve.pool import KVPagePool
 from repro.serve.scheduler import FifoScheduler, Scheduler
 
 PREFIX_KEY_TOKENS = 128  # tokens hashed into the shared-prefix group key
+
+
+class StreamTruncated(RuntimeError):
+    """A stream iterator / drain loop hit its step limit before the
+    request (or session) completed. Subclasses RuntimeError so legacy
+    callers catching that keep working; the message says how far the
+    stream got and which knob raises the limit
+    (``ServeSession(max_stream_steps=...)``)."""
 
 
 @dataclasses.dataclass
@@ -64,6 +94,10 @@ class Request:
     # None = greedy (exact legacy token streams); a stochastic spec keys
     # every draw on (spec.seed, token position) — see repro.sample
     sampler: SamplerSpec | None = None
+    # EOS contract: emitting any of these token ids finishes the request
+    # early (the stop token itself IS emitted, nothing after it). At most
+    # MAX_STOP_TOKENS ids; validated loudly at submit().
+    stop_tokens: tuple = ()
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -125,10 +159,17 @@ class StreamHandle:
     def __init__(self, session: "ServeSession", request: Request):
         self.request = request
         self.done = False
+        self.stopped = False  # finished by a stop token (before quota)
         self._session = session
         self._tokens: list[int] = []
         self._cursor = 0
         self._bound = False  # legacy shims mirror state into the Request
+        self._stop = frozenset(int(t) for t in (request.stop_tokens or ()))
+        # preemption bookkeeping: submission order (requeue ordering) and
+        # admission order (youngest-first victim selection)
+        self._submit_index = -1
+        self._admit_index = -1
+        self.preemptions = 0
 
     @property
     def rid(self) -> int:
@@ -137,6 +178,13 @@ class StreamHandle:
     @property
     def last_token(self) -> int:
         return self._tokens[-1]
+
+    @property
+    def prefill_len(self) -> int:
+        """Tokens the next (re-)prefill of this request covers: the
+        prompt plus everything already generated (non-empty only after a
+        preemption — see ``ServeSession.effective_prompt``)."""
+        return len(self.request.prompt) + len(self._tokens)
 
     def peek(self) -> list[int]:
         """All tokens produced so far (does not advance the poll cursor)."""
@@ -148,8 +196,16 @@ class StreamHandle:
         self._cursor += len(new)
         return new
 
-    def tokens(self, max_steps: int = 10_000) -> Iterator[int]:
-        """Yield this request's tokens, stepping the session as needed."""
+    def tokens(self, max_steps: int | None = None) -> Iterator[int]:
+        """Yield this request's tokens, stepping the session as needed.
+
+        ``max_steps`` bounds the session steps this iterator will drive
+        (default: the session's ``max_stream_steps``); hitting the bound
+        raises :class:`StreamTruncated` — loudly, with the progress so
+        far — instead of silently ending the stream.
+        """
+        limit = (self._session.max_stream_steps if max_steps is None
+                 else max_steps)
         steps = 0
         while True:
             yield from self.poll()
@@ -157,10 +213,16 @@ class StreamHandle:
                 return
             self._session.step()
             steps += 1
-            if steps > max_steps:
-                raise RuntimeError("request did not complete")
+            if steps > limit:
+                raise StreamTruncated(
+                    f"request {self.rid} did not complete within {limit} "
+                    f"session steps: {len(self._tokens)} of "
+                    f"{self.request.max_new_tokens} tokens emitted, "
+                    f"{self.preemptions} preemptions; raise the limit via "
+                    f"ServeSession(max_stream_steps=...) or "
+                    f"tokens(max_steps=...)")
 
-    def result(self, max_steps: int = 10_000) -> list[int]:
+    def result(self, max_steps: int | None = None) -> list[int]:
         """Drive the session until this request completes; all tokens."""
         for _ in self.tokens(max_steps=max_steps):
             pass
@@ -188,13 +250,27 @@ class ServeSession:
     def __init__(self, backend: DecodeBackend, *, max_batch: int = 8,
                  scheduler: Scheduler | None = None,
                  policy: SectorPolicy | None = None,
-                 vectorized: bool = True, fuse_wave: bool = True):
+                 vectorized: bool = True, fuse_wave: bool = True,
+                 page_pool: KVPagePool | None = None,
+                 max_stream_steps: int = 10_000):
         self.backend = backend
         self.max_batch = max_batch
         self.scheduler = scheduler if scheduler is not None else FifoScheduler()
         self.policy = policy if policy is not None else HysteresisPolicy()
         self.vectorized = vectorized
         self.fuse_wave = fuse_wave
+        # KV capacity model: None = unbounded (every pre-pool behaviour
+        # unchanged); a pool gates admission and arms preemption
+        self.page_pool = page_pool
+        # default bound for StreamHandle.tokens()/result() and
+        # run_until_drained(); exceeding it raises StreamTruncated
+        if max_stream_steps < 1:
+            raise ValueError(
+                f"max_stream_steps must be >= 1, got {max_stream_steps}")
+        self.max_stream_steps = max_stream_steps
+        # vocab bound for stop-token validation, when the backend can say
+        # (SectoredKVBackend exposes cfg.vocab; decorators pass through)
+        self._vocab = getattr(backend, "vocab", None)
         # metering is discovered, not configured: a MeteredBackend carries a
         # WaveMeter; a plain backend has none and every telemetry branch
         # below reduces to one `is None` check (zero-cost when off)
@@ -240,12 +316,14 @@ class ServeSession:
         self._wave_cache: dict[tuple, Any] = {}
         self._vmapped_prefill = None
         self.wave_in_flight = False  # True between dispatch and blocking
+        self._submit_seq = 0  # submission order (preemption requeue key)
+        self._admit_seq = 0  # admission order (youngest-first victims)
 
     @staticmethod
     def _zero_stats() -> dict[str, int]:
         return dict(decode_steps=0, sectored_steps=0, completed=0, waves=0,
                     sectored_waves=0, merged_slots=0, overlapped_prefills=0,
-                    prefill_calls=0)
+                    prefill_calls=0, preemptions=0, eos_stops=0)
 
     def reset_stats(self) -> None:
         self.stats = self._zero_stats()
@@ -256,16 +334,57 @@ class ServeSession:
                bind_request: bool = False) -> StreamHandle:
         """Queue a request; returns its streaming handle.
 
+        Degenerate requests are rejected loudly here — an empty prompt,
+        a non-positive token budget, or stop tokens outside the vocab
+        would otherwise surface as undefined wave behaviour (zero-length
+        prefills, slots that never finish, stop masks that can't match).
+
         ``bind_request=True`` restores the legacy contract for the
         ``Engine`` shims: tokens are mirrored into ``request.generated``
         (shared list) and ``request.done`` is set on completion.
         """
+        self._validate(request)
         handle = StreamHandle(self, request)
+        handle._submit_index = self._submit_seq
+        self._submit_seq += 1
         if bind_request:
             handle._tokens = request.generated
             handle._bound = True
         self.queue.append(handle)
         return handle
+
+    def _validate(self, request: Request) -> None:
+        prompt = np.asarray(request.prompt)
+        if prompt.size == 0:
+            raise ValueError(f"request {request.rid}: empty prompt")
+        if request.max_new_tokens < 1:
+            raise ValueError(
+                f"request {request.rid}: max_new_tokens must be >= 1, got "
+                f"{request.max_new_tokens} (the prefill always emits one "
+                f"token)")
+        stop = tuple(int(t) for t in (request.stop_tokens or ()))
+        if len(stop) > MAX_STOP_TOKENS:
+            raise ValueError(
+                f"request {request.rid}: {len(stop)} stop tokens exceed the "
+                f"wave-side mask width MAX_STOP_TOKENS={MAX_STOP_TOKENS}")
+        bad = [t for t in stop
+               if t < 0 or (self._vocab is not None and t >= self._vocab)]
+        if bad:
+            bound = (f"[0, {self._vocab})" if self._vocab is not None
+                     else ">= 0")
+            raise ValueError(
+                f"request {request.rid}: stop tokens {bad} outside vocab "
+                f"({bound}) — they could never match an emitted token")
+        if self.page_pool is not None:
+            worst = self.page_pool.pages_for(
+                prompt.size + request.max_new_tokens)
+            if worst > self.page_pool.capacity_pages:
+                raise ValueError(
+                    f"request {request.rid}: worst-case KV footprint "
+                    f"({worst} pages for {prompt.size} prompt + "
+                    f"{request.max_new_tokens} new tokens) exceeds the "
+                    f"page pool ({self.page_pool.capacity_pages} pages) — "
+                    f"it could never run to completion even alone")
 
     @property
     def occupancy(self) -> float:
@@ -284,40 +403,62 @@ class ServeSession:
 
     # -- prefill / admission (driven by the Scheduler) --------------------
 
+    @staticmethod
+    def effective_prompt(handle: StreamHandle) -> np.ndarray:
+        """The tokens a (re-)prefill of this request covers: the prompt,
+        plus everything already generated when the request was preempted
+        mid-stream. Re-prefilling over ``prompt + generated`` rebuilds
+        the KV cache with the same appends the uncontended run made
+        (SectoredKVBackend's prefill scans the same exact-mode step its
+        decode path runs), which is what keeps a resumed stream
+        bit-identical on the exact path."""
+        prompt = np.asarray(handle.request.prompt, np.int32)
+        if not handle._tokens:
+            return prompt
+        return np.concatenate(
+            [prompt, np.asarray(handle._tokens, np.int32)])
+
     def prefill_one(self, handle: StreamHandle):
         """Blocking single-prompt prefill; returns (first_token, state)."""
-        logits, state = self.backend.prefill_fn(handle.request.prompt[None, :])
+        prompt = self.effective_prompt(handle)
+        logits, state = self.backend.prefill_fn(prompt[None, :])
         self.stats["prefill_calls"] += 1
         if self.meter is not None:
-            self.meter.record_prefill(handle.rid, len(handle.request.prompt),
-                                      overlapped=self.wave_in_flight)
+            self.meter.record_prefill(handle.rid, len(prompt),
+                                      overlapped=self.wave_in_flight,
+                                      resumed=bool(handle._tokens))
         return self._first_token(handle, logits[0]), state
 
     @staticmethod
     def _first_token(handle: StreamHandle, logits_row) -> int:
-        """Select the prefill-emitted token (RNG counter 0 for sampled
-        requests; greedy keeps the exact legacy host argmax)."""
+        """Select the prefill-emitted token (RNG counter ``len(tokens)``
+        for sampled requests — 0 on a fresh admission, the resume
+        position after a preemption; greedy keeps the exact legacy host
+        argmax)."""
         spec = handle.request.sampler
         if spec is None or spec.is_greedy:
             return int(np.argmax(np.asarray(logits_row)))
-        return sample_token(np.asarray(logits_row), spec, position=0)
+        return sample_token(np.asarray(logits_row), spec,
+                            position=len(handle._tokens))
 
     def prefill_group(self, handles: list[StreamHandle]) -> PrefillGroup:
         """One prefill call over same-length prompts, kept stacked.
 
-        Groups of two or more go through a vmapped prefill (ONE dispatch
-        for the whole group); singletons take the exact ``prefill_one``
-        data path with a unit leading axis added. Nothing here blocks on
+        Lengths are *effective* (prompt + generated-so-far), so resumed
+        requests group with fresh ones of the same total length. Groups
+        of two or more go through a vmapped prefill (ONE dispatch for
+        the whole group); singletons take the exact ``prefill_one`` data
+        path with a unit leading axis added. Nothing here blocks on
         device results — see :class:`PrefillGroup`.
         """
-        lengths = {len(h.request.prompt) for h in handles}
+        prompts = [self.effective_prompt(h) for h in handles]
+        lengths = {len(p) for p in prompts}
         if len(lengths) != 1:
             raise ValueError(f"prefill_group needs equal prompt lengths, "
                              f"got {sorted(lengths)}")
         self.stats["prefill_calls"] += 1
         if len(handles) == 1:
-            logits, state = self.backend.prefill_fn(
-                handles[0].request.prompt[None, :])
+            logits, state = self.backend.prefill_fn(prompts[0][None, :])
             stacked = jax.tree.map(lambda x: x[None], state)
             logits = logits[None]  # (1, 1, vocab)
         else:
@@ -331,13 +472,13 @@ class ServeSession:
                     prefill_fn = self.backend.prefill_fn
                     self._vmapped_prefill = jax.jit(
                         jax.vmap(lambda p: prefill_fn(p[None, :])))
-            prompts = jnp.asarray(
-                np.stack([h.request.prompt for h in handles]), jnp.int32)
-            logits, stacked = self._vmapped_prefill(prompts)
+            stacked_prompts = jnp.asarray(np.stack(prompts), jnp.int32)
+            logits, stacked = self._vmapped_prefill(stacked_prompts)
         if self.meter is not None:
-            for h in handles:
-                self.meter.record_prefill(h.rid, len(h.request.prompt),
-                                          overlapped=self.wave_in_flight)
+            for h, p in zip(handles, prompts):
+                self.meter.record_prefill(h.rid, len(p),
+                                          overlapped=self.wave_in_flight,
+                                          resumed=bool(h._tokens))
         return PrefillGroup(list(handles), logits, stacked,
                             stacked_row_signature(stacked))
 
@@ -429,9 +570,11 @@ class ServeSession:
         specs = [h.request.sampler for h in group.handles]
         if any(s is not None and not s.is_greedy for s in specs):
             # ONE stacked selection dispatch over the whole group through
-            # the wave kernel (counter 0); greedy rows take its greedy
+            # the wave kernel (counter 0 fresh, len(generated) on a
+            # post-preemption resume); greedy rows take its greedy
             # branch — the same first-max argmax as the path below
-            rows = SamplerRows.from_specs(specs, [0] * len(group))
+            rows = SamplerRows.from_specs(
+                specs, [len(h._tokens) for h in group.handles])
             toks, _ = select_tokens(group.logits, rows)
             tokens = np.asarray(toks).reshape(len(group), -1)[:, 0]
         else:
@@ -442,12 +585,17 @@ class ServeSession:
 
     def _scatter_sampler_rows(self, slots: list[int], handles) -> None:
         """Admission scatter for the per-slot sampler state: each handle's
-        spec scalars land in its slot with the RNG counter at 1 (the
-        prefill token consumed counter 0). Rows of vacated slots stay
-        stale — counter-based keying makes them inert, and the next
-        admission rewrites them."""
+        spec scalars land in its slot with the RNG counter one past the
+        tokens already emitted (1 on a fresh admission — the prefill token
+        consumed counter 0; ``len(generated) + 1`` on a post-preemption
+        resume, keeping the counter in lockstep with the stream). The
+        request's stop set rides along as the wave-side EOS mask. Rows of
+        vacated slots stay stale — counter-based keying makes them inert,
+        and the next admission rewrites them."""
         rows = SamplerRows.from_specs(
-            [h.request.sampler for h in handles], [1] * len(handles))
+            [h.request.sampler for h in handles],
+            [len(h._tokens) + 1 for h in handles],
+            [h.request.stop_tokens for h in handles])
         idx = jnp.asarray(np.asarray(slots, np.int32))
         self._sampler_rows = jax.tree.map(
             lambda big, row: big.at[idx].set(row), self._sampler_rows, rows)
@@ -455,16 +603,29 @@ class ServeSession:
     def _emit_first(self, slot: int, handle: StreamHandle,
                     first_token: int) -> None:
         """Activate a slot and emit the prefill token; a request whose
-        quota the prefill token already meets (max_new_tokens <= 1)
-        completes here without burning a decode wave."""
+        quota the prefill token already meets (max_new_tokens <= 1), or
+        whose prefill token is one of its stop tokens, completes here
+        without burning a decode wave."""
         self.slots[slot] = handle
+        handle._admit_index = self._admit_seq
+        self._admit_seq += 1
+        if self.page_pool is not None:
+            self.page_pool.observe(self._held_pages_total())
         handle._tokens.append(first_token)
-        if len(handle._tokens) >= handle.request.max_new_tokens:
+        if first_token in handle._stop:
+            self._finish(slot, stopped=True)
+        elif len(handle._tokens) >= handle.request.max_new_tokens:
             self._finish(slot)
 
-    def _finish(self, slot: int) -> None:
+    def _finish(self, slot: int, *, stopped: bool = False) -> None:
         handle = self.slots[slot]
         handle.done = True
+        if stopped:
+            # EOS: the stop token itself was emitted; the remaining
+            # max_new_tokens budget is returned, the slot (and its KV
+            # pages) freed now
+            handle.stopped = True
+            self.stats["eos_stops"] += 1
         if handle._bound:
             handle.request.done = True
         self.slots[slot] = None
@@ -472,6 +633,94 @@ class ServeSession:
             self.states[slot] = None
         self.completion_order.append(handle.rid)
         self.stats["completed"] += 1
+
+    # -- KV page capacity (pool-gated admission + preemption) -------------
+
+    def _held_pages_total(self, extra_tokens: int = 0) -> int:
+        """Pages all resident requests hold, each optionally grown by
+        ``extra_tokens`` (1 = the append the next wave makes per slot).
+        Derived from live slot lengths every call — the accountant can
+        never drift from the truth it accounts."""
+        return sum(
+            self.page_pool.pages_for(h.prefill_len + extra_tokens)
+            for h in self.slots if h is not None)
+
+    def pool_admits(self, handle: StreamHandle) -> bool:
+        """Can this request be admitted *now*? Its current need (the
+        effective prompt plus the token the prefill emits) must fit next
+        to everyone's current holdings. Deliberately not the worst case:
+        the pool overcommits against future growth and relies on
+        preemption to unwind — that's what lets load beyond capacity
+        degrade instead of serialize."""
+        if self.page_pool is None:
+            return True
+        need = self.page_pool.pages_for(handle.prefill_len + 1)
+        return self.page_pool.fits(self._held_pages_total() + need)
+
+    def pool_admit_count(self, handles: list[StreamHandle]) -> int:
+        """Longest prefix of ``handles`` admissible together right now
+        (the group-admission form of :meth:`pool_admits`; order is the
+        caller's admission order, so gating a prefix keeps it fair)."""
+        if self.page_pool is None:
+            return len(handles)
+        held = self._held_pages_total()
+        n = 0
+        for h in handles:
+            need = self.page_pool.pages_for(h.prefill_len + 1)
+            if not self.page_pool.fits(held + need):
+                break
+            held += need
+            n += 1
+        return n
+
+    def preempt_overcommitted(self) -> int:
+        """Unwind pool overcommit before the next wave grows every slot.
+
+        While the holdings the coming wave produces (each resident slot
+        one token longer) exceed the budget, evict the youngest-admitted
+        request — LIFO victims keep the oldest streams moving, bounding
+        head-of-line latency — and requeue the victims at the queue
+        FRONT in submission order, ahead of never-admitted requests.
+        Never preempts below one active request: a lone request always
+        fits (``submit`` rejected anything that couldn't), so every
+        preemption cycle still emits at least one token and the loop
+        cannot livelock. Returns the number of requests preempted.
+        """
+        if self.page_pool is None:
+            return 0
+        victims: list[StreamHandle] = []
+        while True:
+            active = [(s, h) for s, h in enumerate(self.slots)
+                      if h is not None]
+            if len(active) <= 1:
+                break
+            if self.page_pool.fits(self._held_pages_total(extra_tokens=1)):
+                break
+            slot, _ = max(active, key=lambda sh: sh[1]._admit_index)
+            victims.append(self._preempt(slot))
+        if victims:
+            for h in sorted(victims, key=lambda h: h._submit_index,
+                            reverse=True):
+                self.queue.appendleft(h)
+            self.stats["preemptions"] += len(victims)
+        return len(victims)
+
+    def _preempt(self, slot: int) -> StreamHandle:
+        """Vacate a slot WITHOUT finishing its request: its KV pages are
+        freed (the stacked buffer keeps stale rows — vmapped slots are
+        independent and the next admission overwrites them) and the
+        handle keeps its generated tokens for the resume re-prefill."""
+        handle = self.slots[slot]
+        handle.preemptions += 1
+        handle._admit_index = -1
+        self.slots[slot] = None
+        if not self.vectorized:
+            self.states[slot] = None
+        if self.meter is not None:
+            self.meter.record_eviction(
+                handle.rid, kv_tokens=handle.prefill_len,
+                kv_pages=self.page_pool.pages_for(handle.prefill_len))
+        return handle
 
     # -- demand merge (shared-prefix OR-merge, LSQ-Lookahead analogue) ----
 
@@ -720,22 +969,35 @@ class ServeSession:
         produced = 0
         for s in active:
             handle = self.slots[s]
-            handle._tokens.append(int(next_tok[s]))
+            tok = int(next_tok[s])
+            handle._tokens.append(tok)
             produced += 1
             self.stats["decode_steps"] += 1
             if use_sectored:
                 self.stats["sectored_steps"] += 1
-            if len(handle._tokens) >= handle.request.max_new_tokens:
+            if tok in handle._stop:
+                self._finish(s, stopped=True)
+            elif len(handle._tokens) >= handle.request.max_new_tokens:
                 self._finish(s)
         return produced
 
-    def run_until_drained(self, max_steps: int = 10_000) -> dict[str, int]:
+    def run_until_drained(self,
+                          max_steps: int | None = None) -> dict[str, int]:
+        """Step until every queued request completes (default bound: the
+        session's ``max_stream_steps``; the bound raises
+        :class:`StreamTruncated` rather than silently returning)."""
+        limit = self.max_stream_steps if max_steps is None else max_steps
         steps = 0
         while not self.idle:
             self.step()
             steps += 1
-            if steps > max_steps:
-                raise RuntimeError("engine did not drain")
+            if steps > limit:
+                raise StreamTruncated(
+                    f"engine did not drain within {limit} steps "
+                    f"(queued={len(self.queue)}, "
+                    f"active={len(self.active_slots())}); raise the limit "
+                    f"via ServeSession(max_stream_steps=...) or "
+                    f"run_until_drained(max_steps=...)")
         return self.stats
 
 
@@ -743,10 +1005,14 @@ def make_session(backend_or_fns, *, max_batch: int = 8,
                  scheduler: Scheduler | None = None,
                  policy: SectorPolicy | None = None,
                  vectorized: bool = True,
-                 fuse_wave: bool = True) -> ServeSession:
+                 fuse_wave: bool = True,
+                 page_pool: KVPagePool | None = None,
+                 max_stream_steps: int = 10_000) -> ServeSession:
     """Convenience constructor accepting a backend or the legacy 4-tuple."""
     if isinstance(backend_or_fns, (tuple, list)):
         backend_or_fns = ServingBackend(*backend_or_fns)
     return ServeSession(backend_or_fns, max_batch=max_batch,
                         scheduler=scheduler, policy=policy,
-                        vectorized=vectorized, fuse_wave=fuse_wave)
+                        vectorized=vectorized, fuse_wave=fuse_wave,
+                        page_pool=page_pool,
+                        max_stream_steps=max_stream_steps)

@@ -118,6 +118,7 @@ def attn_mass_captured(table: np.ndarray, position: int, page_size: int,
 def _zero_totals() -> dict[str, float]:
     return dict(waves=0, sectored_waves=0, dense_waves=0, tokens=0,
                 prefill_events=0, prefill_tokens=0, overlapped_prefills=0,
+                resumed_prefills=0, evictions=0, evicted_pages=0.0,
                 pages_fetched=0.0, pages_valid=0.0, acts=0, sectors=0.0,
                 act_j=0.0, rd_j=0.0, wr_j=0.0, prefill_j=0.0, wall_s=0.0,
                 bg_j=0.0, ref_j=0.0, busy_ns=0.0, demand_merges=0)
@@ -169,7 +170,7 @@ class WaveMeter:
     def _req(self, rid: int) -> dict[str, float]:
         return self.per_request.setdefault(
             rid, dict(energy_j=0.0, tokens=0, prefill_tokens=0,
-                      pages_fetched=0.0, pages_valid=0.0))
+                      pages_fetched=0.0, pages_valid=0.0, evictions=0))
 
     def request_stats(self, rid: int) -> dict[str, float] | None:
         stats = self.per_request.get(rid)
@@ -204,11 +205,19 @@ class WaveMeter:
     # -- recording hooks ---------------------------------------------------
 
     def record_prefill(self, rid: int, prompt_len: int, *,
-                       overlapped: bool = False) -> None:
+                       overlapped: bool = False,
+                       resumed: bool = False) -> None:
         """One request's prefill: S token appends + ONE exact-mode read
         pass over the final cache (prefill is single-pass in a production
         backend; our per-token reference loop is an implementation detail
-        the energy model must not charge quadratically)."""
+        the energy model must not charge quadratically).
+
+        ``resumed=True`` marks a post-preemption re-prefill (over
+        ``prompt + generated``): its joules are charged in full — the
+        energy cost of an eviction IS the re-prefill that undoes it — and
+        the token it emits is a genuinely new one (the scan's final
+        logits predict position ``len(generated)``), so the ``tokens``
+        counters advance exactly as the uncontended run's would."""
         g = self.geometry
         valid_units = prompt_len / g.page_size
         fetch = power.kv_fetch_energy(valid_units, valid_units,
@@ -225,9 +234,11 @@ class WaveMeter:
         self.totals["tokens"] += 1  # the prefill-emitted first token
         if overlapped:
             self.totals["overlapped_prefills"] += 1
+        if resumed:
+            self.totals["resumed_prefills"] += 1
         req = self._req(rid)
         req["energy_j"] += joules
-        req["prefill_tokens"] = prompt_len
+        req["prefill_tokens"] += prompt_len
         req["tokens"] += 1
         if self.background:
             busy_ns, bg_j, ref_j = self._background_charge(
@@ -236,6 +247,18 @@ class WaveMeter:
             self.totals["bg_j"] += bg_j
             self.totals["ref_j"] += ref_j
             req["energy_j"] += bg_j + ref_j
+
+    def record_eviction(self, rid: int, *, kv_tokens: int,
+                        kv_pages: int) -> None:
+        """One KV-page preemption: ``kv_pages`` pages covering
+        ``kv_tokens`` cached tokens dropped from the pool. Freeing DRAM
+        costs no energy — the charge for an eviction is the *resumed*
+        re-prefill that later rebuilds the cache (``record_prefill`` with
+        ``resumed=True``); this hook only counts the event so reports can
+        tie re-prefill joules to the preemptions that caused them."""
+        self.totals["evictions"] += 1
+        self.totals["evicted_pages"] += float(kv_pages)
+        self._req(rid)["evictions"] += 1
 
     def record_wave(self, *, sectored: bool, k_pages: int | None,
                     slots: list[tuple[int, int, int]], wall_s: float = 0.0,

@@ -21,8 +21,18 @@ import pathlib
 from typing import Any, Iterable, Mapping
 
 #: record fields folded into the running EMAs (others are kept raw-only)
-EMA_FIELDS = ("sector_coverage", "attn_mass", "energy_j", "k_pages")
+EMA_FIELDS = ("sector_coverage", "attn_mass", "attn_mass_raw", "energy_j",
+              "k_pages")
 DEFAULT_EMA_ALPHA = 0.25
+#: per-wave decay the sector predictor applies to UNFETCHED pages — must
+#: mirror ``runtime.sector_predictor.EMA_DECAY`` (asserted equal in
+#: tests/test_telemetry.py; kept as a literal so this leaf module never
+#: imports the jax-heavy runtime)
+PROBE_DECAY = 0.85
+#: narrow-run horizon for the probe correction: past this many consecutive
+#: narrow waves the unfetched scores are so deflated (0.85^32 ~ 4e-3) that
+#: inverting further just amplifies float noise
+PROBE_RUN_CAP = 32
 
 
 class TraceRecorder:
@@ -34,16 +44,38 @@ class TraceRecorder:
     fields absent from a record — e.g. ``attn_mass`` on a dense wave —
     leave their EMA untouched, so a burst of dense waves does not erase the
     sectored-path coverage signal.
+
+    **Probe-page correction.** The predictor's ``attn_mass`` estimate
+    drifts high on long narrow runs: ``sector_predictor.update`` decays
+    *every* page's score by :data:`PROBE_DECAY` each wave but refreshes
+    only the fetched ones, so after ``n`` consecutive narrow
+    (coverage < 1) waves the unfetched scores are deflated by
+    ``PROBE_DECAY**n`` and the captured *share* inflates toward 1.0 —
+    exactly the runs where an adaptive policy most needs an honest
+    signal. The recorder inverts that known bias before folding the EMA:
+    with raw share ``c``, the corrected share is
+    ``c / (c + (1 - c) * PROBE_DECAY**(-min(n, PROBE_RUN_CAP)))``
+    (fetched mass is refreshed and trusted; unfetched mass is re-inflated
+    by the decay it silently accrued). ``n`` resets on any full-coverage
+    wave — a dense wave or a full sectored fetch re-anchors the whole
+    table, like the paper's periodic SHT probe refresh. The uncorrected
+    value is preserved per record (and EMA'd) as ``attn_mass_raw``.
     """
 
     def __init__(self, capacity: int = 1024,
-                 ema_alpha: float = DEFAULT_EMA_ALPHA):
+                 ema_alpha: float = DEFAULT_EMA_ALPHA,
+                 probe_decay: float = PROBE_DECAY):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if not 0.0 < ema_alpha <= 1.0:
             raise ValueError(f"ema_alpha must be in (0, 1], got {ema_alpha}")
+        if not 0.0 < probe_decay <= 1.0:
+            raise ValueError(
+                f"probe_decay must be in (0, 1], got {probe_decay}")
         self.capacity = capacity
         self.ema_alpha = ema_alpha
+        self.probe_decay = probe_decay
+        self._narrow_run = 0  # consecutive narrow waves since full coverage
         self._buf: collections.deque[dict[str, Any]] = collections.deque(
             maxlen=capacity)
         self._appended = 0
@@ -60,6 +92,7 @@ class TraceRecorder:
     def append(self, record: Mapping[str, Any]) -> None:
         rec = dict(record)
         rec.setdefault("seq", self._appended)
+        self._apply_probe_correction(rec)
         self._buf.append(rec)
         self._appended += 1
         for field in EMA_FIELDS:
@@ -71,6 +104,25 @@ class TraceRecorder:
             self.ema[field] = (value if prev is None else
                                (1.0 - self.ema_alpha) * prev
                                + self.ema_alpha * value)
+
+    def _apply_probe_correction(self, rec: dict[str, Any]) -> None:
+        """De-bias ``attn_mass`` in place (see class docstring); tracks
+        the narrow-run length from the record's own coverage field."""
+        coverage = rec.get("sector_coverage")
+        if coverage is not None:
+            if float(coverage) >= 1.0 - 1e-9:
+                self._narrow_run = 0  # full fetch re-anchors the table
+            else:
+                self._narrow_run += 1
+        raw = rec.get("attn_mass")
+        if raw is None:
+            return
+        raw = float(raw)
+        rec["attn_mass_raw"] = raw
+        n = min(self._narrow_run, PROBE_RUN_CAP)
+        if n > 0 and 0.0 < raw < 1.0:
+            rec["attn_mass"] = raw / (
+                raw + (1.0 - raw) * self.probe_decay ** (-n))
 
     def window(self, n: int | None = None) -> list[dict[str, Any]]:
         """The last ``n`` records (all buffered records when ``n`` is None)."""

@@ -251,3 +251,20 @@ def test_greedy_requests_invariant_to_sampled_coresidents():
         (10, np.arange(3, dtype=np.int32), 6,
          SamplerSpec(temperature=1.5, seed=5))])
     assert all(mixed[rid] == ref[rid] for rid in (0, 1, 2))
+
+
+def test_advance_hold_freezes_selected_rows():
+    """``advance(hold=mask)`` is the fused wave's EOS mechanism: held
+    rows keep their counter (their next draw replays the same position)
+    while live rows advance normally; no mask means advance-all."""
+    rows = SamplerRows.from_specs(
+        [SamplerSpec(temperature=1.0, seed=1)] * 3, [4, 7, 9])
+    held = rows.advance(hold=jnp.asarray([True, False, True]))
+    np.testing.assert_array_equal(np.asarray(held.pos), [4, 8, 9])
+    np.testing.assert_array_equal(np.asarray(rows.advance().pos),
+                                  [5, 8, 10])
+    # seeds / shaping fields ride along untouched
+    np.testing.assert_array_equal(np.asarray(held.seed),
+                                  np.asarray(rows.seed))
+    np.testing.assert_array_equal(np.asarray(held.stop),
+                                  np.asarray(rows.stop))

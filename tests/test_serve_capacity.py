@@ -1,0 +1,376 @@
+"""Serving contracts under load: EOS stop tokens, request validation,
+stream-truncation surfacing, and KV-page pool admission / preemption.
+
+The fake backend here is *resume-consistent* by construction: its decode
+state carries the running token sum, and its prefill recomputes that sum
+from scratch — so re-prefilling over ``prompt + generated`` lands in
+exactly the state the uncontended run reached, and preemption/resume
+must be bit-invisible in the token streams (the same algebra the real
+``SectoredKVBackend`` gets from scanning its exact-mode decode step)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import sectored_decode
+from repro.sample import MAX_STOP_TOKENS, NO_STOP, SamplerRows, SamplerSpec
+from repro.serve import (FifoScheduler, KVPagePool, OverlapScheduler,
+                         Request, ServeSession, ServingBackend,
+                         StreamTruncated, make_fused_wave)
+from repro.serve.pool import DEFAULT_PAGE_SIZE
+
+VOCAB = 32
+
+
+def _sum_backend(quantum=None, vocab=VOCAB):
+    """Resume-consistent toy backend: state carries ``s = sum(tokens
+    consumed so far)`` and every step emits ``one_hot(s % vocab)``.
+
+    Prefill over ``prompt + generated`` recomputes the same ``s`` the
+    uncontended decode chain reached, so a preempted request's resumed
+    stream is algebraically identical. ``quantum`` optionally pads the
+    kv leaf's width to the prompt-length quantum (page-padded state
+    signatures, for the overlap head-of-line tests); the default is a
+    fixed shape so FIFO can mix lengths.
+    """
+
+    def prefill_fn(tokens):
+        B, S = tokens.shape
+        s = jnp.sum(tokens, axis=1).astype(jnp.int32)
+        width = 8 if quantum is None else quantum * (
+            (S + quantum - 1) // quantum)
+        kv = jnp.zeros((B, width), jnp.float32)
+        return jax.nn.one_hot(s % vocab, vocab), dict(s=s, kv=kv)
+
+    def decode_fn(state, token):
+        s = state["s"] + token[:, 0]
+        return jax.nn.one_hot(s % vocab, vocab), dict(s=s, kv=state["kv"])
+
+    return ServingBackend(prefill_fn, decode_fn, vocab=vocab)
+
+
+def _expected_stream(prompt, n, vocab=VOCAB, stop=()):
+    """Host-side replay of the sum backend's greedy stream."""
+    s = int(np.sum(prompt))
+    out = []
+    for _ in range(n):
+        tok = s % vocab
+        out.append(tok)
+        if tok in stop:
+            break
+        s += tok
+    return out
+
+
+# -- EOS / stop-token contract ----------------------------------------------
+
+
+@pytest.mark.parametrize("fuse_wave", [True, False],
+                         ids=["fused", "prefused"])
+def test_stop_token_terminates_early(fuse_wave):
+    """A stop token ends the stream the moment it is emitted — the stop
+    token itself IS the last token, the budget is not burned, and the
+    fused wave (stop mask inside the executable) matches the pre-fused
+    reference wave exactly."""
+    prompt = np.asarray([1, 2], np.int32)  # stream: 3, 6, 12, 24, 16, ...
+    sess = ServeSession(_sum_backend(), max_batch=2, fuse_wave=fuse_wave)
+    h = sess.submit(Request(0, prompt, max_new_tokens=10,
+                            stop_tokens=(12,)))
+    sess.run_until_drained()
+    assert h.peek() == [3, 6, 12]
+    assert h.done and h.stopped
+    assert sess.stats["eos_stops"] == 1
+    assert sess.active_slots() == []  # slot (and its pages) freed
+
+
+def test_stop_token_at_prefill_completes_without_a_wave():
+    prompt = np.asarray([1, 2], np.int32)  # prefill emits 3
+    sess = ServeSession(_sum_backend(), max_batch=2)
+    h = sess.submit(Request(0, prompt, max_new_tokens=10, stop_tokens=(3,)))
+    sess.step()
+    assert h.peek() == [3] and h.done and h.stopped
+    assert sess.stats["decode_steps"] == 0
+
+
+def test_no_stop_tokens_runs_to_quota():
+    prompt = np.asarray([1, 2], np.int32)
+    sess = ServeSession(_sum_backend(), max_batch=2)
+    h = sess.submit(Request(0, prompt, max_new_tokens=5))
+    sess.run_until_drained()
+    assert h.peek() == _expected_stream(prompt, 5)
+    assert h.done and not h.stopped and sess.stats["eos_stops"] == 0
+
+
+def test_stopped_and_unstopped_share_a_wave():
+    """A mixed wave: one slot stops early, the other runs to quota —
+    per-slot stop masks must not leak across slots."""
+    p0 = np.asarray([1, 2], np.int32)
+    p1 = np.asarray([2, 3], np.int32)
+    sess = ServeSession(_sum_backend(), max_batch=2)
+    h0 = sess.submit(Request(0, p0, max_new_tokens=8, stop_tokens=(12,)))
+    h1 = sess.submit(Request(1, p1, max_new_tokens=8, stop_tokens=(12,)))
+    sess.run_until_drained()
+    assert h0.peek() == [3, 6, 12] and h0.stopped
+    assert h1.peek() == _expected_stream(p1, 8, stop=(12,))
+
+
+def test_fused_wave_guard_reemits_and_holds_counter():
+    """Wave-level enforcement: a slot whose INPUT token is in its stop
+    set re-emits that token and freezes its RNG counter, no matter how
+    long it stays resident (defense-in-depth under host bookkeeping
+    races — normally the host vacates the slot first)."""
+
+    def fn(state, token):
+        logits = jax.nn.one_hot((token[:, 0] + 1) % VOCAB, VOCAB)
+        return logits, state
+
+    wave = make_fused_wave(fn, sampled=True)
+    rows = SamplerRows.from_specs(
+        [SamplerSpec(temperature=0.0), SamplerSpec(temperature=0.0)],
+        [5, 5], [(7,), ()])
+    state = jnp.zeros((2, 1))
+    tokens = jnp.asarray([[[7]], [[7]]], jnp.int32)
+    out, _, new_rows = wave(state, tokens, rows)
+    out = np.asarray(out).reshape(-1)
+    assert out[0] == 7  # stopped slot: input re-emitted, not 8
+    assert out[1] == 8  # live slot unaffected
+    assert np.asarray(new_rows.pos).tolist() == [5, 6]  # held vs advanced
+
+
+# -- submit-time validation --------------------------------------------------
+
+
+def test_submit_rejects_empty_prompt():
+    sess = ServeSession(_sum_backend(), max_batch=2)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sess.submit(Request(0, np.zeros((0,), np.int32), max_new_tokens=4))
+
+
+@pytest.mark.parametrize("n", [0, -3])
+def test_submit_rejects_nonpositive_budget(n):
+    sess = ServeSession(_sum_backend(), max_batch=2)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sess.submit(Request(0, np.arange(3, dtype=np.int32),
+                            max_new_tokens=n))
+
+
+def test_submit_rejects_out_of_vocab_stop_tokens():
+    sess = ServeSession(_sum_backend(), max_batch=2)
+    with pytest.raises(ValueError, match="outside vocab"):
+        sess.submit(Request(0, np.arange(3, dtype=np.int32),
+                            max_new_tokens=4, stop_tokens=(VOCAB,)))
+    with pytest.raises(ValueError, match="outside vocab"):
+        sess.submit(Request(1, np.arange(3, dtype=np.int32),
+                            max_new_tokens=4, stop_tokens=(-1,)))
+
+
+def test_submit_rejects_oversized_stop_set():
+    sess = ServeSession(_sum_backend(), max_batch=2)
+    with pytest.raises(ValueError, match="MAX_STOP_TOKENS"):
+        sess.submit(Request(0, np.arange(3, dtype=np.int32),
+                            max_new_tokens=4,
+                            stop_tokens=tuple(range(MAX_STOP_TOKENS + 1))))
+
+
+def test_submit_rejects_request_larger_than_whole_pool():
+    pool = KVPagePool(2, page_size=4)  # 8 tokens total
+    sess = ServeSession(_sum_backend(), max_batch=2, page_pool=pool)
+    with pytest.raises(ValueError, match="could never run to completion"):
+        sess.submit(Request(0, np.arange(6, dtype=np.int32),
+                            max_new_tokens=4))  # worst case 10 tokens
+    # exactly at capacity is fine
+    sess.submit(Request(1, np.arange(4, dtype=np.int32), max_new_tokens=4))
+
+
+def test_stop_rows_padded_with_no_stop():
+    rows = SamplerRows.from_specs([None, None], [1, 1], [(5,), None])
+    stop = np.asarray(rows.stop)
+    assert stop.shape == (2, MAX_STOP_TOKENS)
+    assert stop[0, 0] == 5 and (stop[0, 1:] == NO_STOP).all()
+    assert (stop[1] == NO_STOP).all()
+
+
+# -- stream truncation surfacing ---------------------------------------------
+
+
+def test_tokens_iterator_raises_stream_truncated():
+    sess = ServeSession(_sum_backend(), max_batch=1, max_stream_steps=3)
+    sess.submit(Request(0, np.arange(3, dtype=np.int32), max_new_tokens=8))
+    h1 = sess.submit(Request(1, np.arange(3, dtype=np.int32),
+                             max_new_tokens=8))
+    with pytest.raises(StreamTruncated, match="did not complete within 3"):
+        list(h1.tokens())
+    # per-call override trumps the session default; RuntimeError subclass
+    # keeps legacy except-clauses working
+    assert issubclass(StreamTruncated, RuntimeError)
+    assert len(list(h1.tokens(max_steps=100))) > 0
+
+
+def test_run_until_drained_truncation_mentions_drain():
+    sess = ServeSession(_sum_backend(), max_batch=1)
+    for rid in range(4):
+        sess.submit(Request(rid, np.arange(3, dtype=np.int32),
+                            max_new_tokens=8))
+    with pytest.raises(StreamTruncated, match="did not drain"):
+        sess.run_until_drained(max_steps=2)
+
+
+def test_session_rejects_nonpositive_stream_limit():
+    with pytest.raises(ValueError, match="max_stream_steps"):
+        ServeSession(_sum_backend(), max_batch=1, max_stream_steps=0)
+
+
+# -- KV page pool ------------------------------------------------------------
+
+
+def test_pool_page_arithmetic_and_default_quantum():
+    pool = KVPagePool(4, page_size=8)
+    assert pool.pages_for(1) == 1 and pool.pages_for(8) == 1
+    assert pool.pages_for(9) == 2 and pool.pages_for(0) == 1
+    # the leaf-module default mirrors the sectored runtime's page quantum
+    assert DEFAULT_PAGE_SIZE == sectored_decode.PAGE_SIZE
+    with pytest.raises(ValueError):
+        KVPagePool(0)
+    with pytest.raises(ValueError):
+        KVPagePool(4, page_size=0)
+
+
+def test_pool_gates_admission_without_preempting():
+    """A pool holding one request at a time serializes admission: the
+    queue head waits (degrades) instead of being refused, and no
+    preemption is needed because nothing overcommits."""
+    pool = KVPagePool(2, page_size=4)  # 8 tokens: one request's worst case
+    sess = ServeSession(_sum_backend(), max_batch=4, page_pool=pool)
+    handles = [sess.submit(Request(rid, np.arange(4, dtype=np.int32),
+                                   max_new_tokens=4)) for rid in range(3)]
+    sess.step()
+    assert len(sess.active_slots()) == 1  # capacity, not slots, limits
+    sess.run_until_drained()
+    assert all(h.done for h in handles)
+    assert sess.stats["preemptions"] == 0
+    assert sess.completion_order == [0, 1, 2]
+    assert pool.peak_pages <= pool.capacity_pages
+
+
+def _preempting_setup(scheduler, pool_pages=4, quantum=None):
+    """Two requests that admit together (2 pages each at page_size=4)
+    but overcommit as they grow past the 8->9 token page boundary
+    (3 pages each against a 4-page pool) — growth must preempt the
+    younger one."""
+    sess = ServeSession(_sum_backend(quantum=quantum), max_batch=4,
+                        scheduler=scheduler,
+                        page_pool=KVPagePool(pool_pages, page_size=4))
+    reqs = [Request(rid, np.asarray([rid + 1, 2, 3, 5], np.int32),
+                    max_new_tokens=8) for rid in range(2)]
+    return sess, [sess.submit(r) for r in reqs]
+
+
+@pytest.mark.parametrize("scheduler", [FifoScheduler, OverlapScheduler],
+                         ids=["fifo", "overlap"])
+def test_growth_preempts_youngest_and_streams_match_uncontended(scheduler):
+    sess, handles = _preempting_setup(scheduler())
+    sess.run_until_drained()
+    assert sess.stats["preemptions"] > 0
+    assert handles[1].preemptions > 0  # youngest-admitted is the victim
+    assert handles[0].preemptions == 0  # the oldest stream kept moving
+    for h in handles:
+        expect = _expected_stream(h.request.prompt, 8)
+        assert h.peek() == expect, f"rid {h.rid} diverged after preemption"
+
+
+def test_preemption_resumes_sampled_stream_bit_identically():
+    """Counter-keyed RNG across a preemption: the resumed request's
+    draws restart at position len(generated), so the sampled stream is
+    identical to its uncontended run."""
+    spec = SamplerSpec(temperature=0.8, seed=11)
+    reqs = lambda: [Request(rid, np.asarray([rid + 1, 2, 3, 5], np.int32),  # noqa: E731
+                            max_new_tokens=8, sampler=spec)
+                    for rid in range(2)]
+    free = ServeSession(_sum_backend(), max_batch=4)
+    free_handles = [free.submit(r) for r in reqs()]
+    free.run_until_drained()
+    tight = ServeSession(_sum_backend(), max_batch=4,
+                         page_pool=KVPagePool(4, page_size=4))
+    tight_handles = [tight.submit(r) for r in reqs()]
+    tight.run_until_drained()
+    assert tight.stats["preemptions"] > 0
+    for a, b in zip(free_handles, tight_handles):
+        assert a.peek() == b.peek()
+
+
+def test_preempted_requests_requeue_in_submission_order():
+    """Whenever preemption puts requests back on the queue, they sit at
+    the front in submission order — checked at every step boundary."""
+    sess = ServeSession(_sum_backend(), max_batch=4,
+                        page_pool=KVPagePool(5, page_size=4))
+    handles = [sess.submit(Request(rid, np.asarray([rid + 1, 2, 3, 5],
+                                                   np.int32),
+                                   max_new_tokens=8)) for rid in range(4)]
+    preempted_seen = 0
+    for _ in range(200):
+        if sess.idle:
+            break
+        sess.step()
+        queued_victims = [h for h in sess.queue if h.preemptions > 0]
+        preempted_seen = max(preempted_seen, len(queued_victims))
+        idx = [h._submit_index for h in queued_victims]
+        assert idx == sorted(idx)
+    assert sess.idle and preempted_seen > 0
+    for h in handles:
+        assert h.peek() == _expected_stream(h.request.prompt, 8)
+
+
+def test_overlap_head_of_line_stress_with_pool_exhaustion():
+    """The overlap satellite: a large-quantum group parks behind the
+    in-flight small-quantum wave while the pool preempts the running
+    requests; nothing overtakes, victims requeue in order, and every
+    stream matches its uncontended run."""
+    quantum = 8
+
+    def submit_all(sess):
+        handles = []
+        for rid in range(3):  # small prompts: quantum-8 signature
+            handles.append(sess.submit(Request(
+                rid, np.asarray([rid + 1, 2, 3, 5], np.int32),
+                max_new_tokens=8)))
+        for rid in range(3, 5):  # long prompts: quantum-16 signature
+            handles.append(sess.submit(Request(
+                rid, np.arange(1, 13, dtype=np.int32),
+                max_new_tokens=4)))
+        return handles
+
+    free = ServeSession(_sum_backend(quantum=quantum), max_batch=3,
+                        scheduler=OverlapScheduler())
+    free_handles = submit_all(free)
+    free.run_until_drained()
+
+    tight = ServeSession(_sum_backend(quantum=quantum), max_batch=3,
+                         scheduler=OverlapScheduler(),
+                         page_pool=KVPagePool(7, page_size=4))
+    tight_handles = submit_all(tight)
+    for _ in range(300):
+        if tight.idle:
+            break
+        tight.step()
+        victims = [h for h in tight.queue if h.preemptions > 0]
+        idx = [h._submit_index for h in victims]
+        assert idx == sorted(idx)
+    assert tight.idle
+    assert tight.stats["preemptions"] > 0
+    for a, b in zip(free_handles, tight_handles):
+        assert a.peek() == b.peek(), f"rid {a.rid} diverged under pressure"
+    assert all(h.done for h in tight_handles)
+
+
+def test_pool_disabled_keeps_legacy_behaviour():
+    """page_pool=None (the default) changes nothing: no preemptions, no
+    admission gating, pool_admits/pool_admit_count are permissive."""
+    sess = ServeSession(_sum_backend(), max_batch=2)
+    handles = [sess.submit(Request(rid, np.arange(4, dtype=np.int32),
+                                   max_new_tokens=4)) for rid in range(4)]
+    assert sess.pool_admits(handles[0])
+    assert sess.pool_admit_count(handles) == 4
+    assert sess.preempt_overcommitted() == 0
+    sess.run_until_drained()
+    assert sess.stats["preemptions"] == 0

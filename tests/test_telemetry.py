@@ -500,3 +500,138 @@ def test_merge_demands_counted_by_meter(setup):
     assert stats["merged_slots"] > 0
     assert backend.meter.totals["demand_merges"] > 0
     assert handles[0].peek() == handles[1].peek()
+
+
+# -- probe-page correction ----------------------------------------------------
+
+
+def _biased_raw(true_mass, n, decay):
+    """The raw attn-mass share the predictor reports after ``n``
+    consecutive narrow waves: unfetched scores silently deflated by
+    ``decay**n`` while fetched mass stays refreshed."""
+    return true_mass / (true_mass + (1.0 - true_mass) * decay ** n)
+
+
+def test_probe_decay_mirrors_predictor_ema_decay():
+    """recorder.PROBE_DECAY is a literal copy of the predictor's decay
+    (the leaf module must not import the jax-heavy runtime) — this is
+    the sync assert that keeps the two from drifting apart."""
+    from repro.runtime import sector_predictor
+    from repro.telemetry import recorder
+    assert recorder.PROBE_DECAY == sector_predictor.EMA_DECAY
+
+
+def test_probe_correction_recovers_true_attn_mass():
+    from repro.telemetry import recorder as rmod
+    rec = TraceRecorder(capacity=64)
+    true_mass = 0.6
+    for n in range(1, 9):
+        rec.append(dict(sector_coverage=0.5,
+                        attn_mass=_biased_raw(true_mass, n,
+                                              rmod.PROBE_DECAY)))
+    for r in rec.window():
+        assert r["attn_mass"] == pytest.approx(true_mass, abs=1e-9)
+        assert r["attn_mass_raw"] > true_mass  # raw bias preserved as-is
+    # both the corrected and the raw series carry EMAs
+    assert rec.ema["attn_mass"] == pytest.approx(true_mass, abs=1e-9)
+    assert rec.ema["attn_mass_raw"] > true_mass
+
+
+def test_probe_correction_resets_on_full_coverage():
+    from repro.telemetry import recorder as rmod
+    rec = TraceRecorder(capacity=64)
+    for n in range(1, 4):
+        rec.append(dict(sector_coverage=0.25,
+                        attn_mass=_biased_raw(0.5, n, rmod.PROBE_DECAY)))
+    # a full-coverage wave re-anchors the table: its mass is trusted raw
+    rec.append(dict(sector_coverage=1.0, attn_mass=0.8))
+    assert rec.window()[-1]["attn_mass"] == pytest.approx(0.8)
+    # and the next narrow wave restarts the run at n=1, not n=5
+    rec.append(dict(sector_coverage=0.25,
+                    attn_mass=_biased_raw(0.5, 1, rmod.PROBE_DECAY)))
+    assert rec.window()[-1]["attn_mass"] == pytest.approx(0.5, abs=1e-9)
+    # records without a coverage field leave the run counter alone
+    rec.append(dict(energy_j=1.0))
+    rec.append(dict(sector_coverage=0.25,
+                    attn_mass=_biased_raw(0.5, 2, rmod.PROBE_DECAY)))
+    assert rec.window()[-1]["attn_mass"] == pytest.approx(0.5, abs=1e-9)
+
+
+def test_probe_correction_long_narrow_run_regression():
+    """The drift this fixes: on a 100-wave narrow run the raw signal
+    saturates toward 1.0 (an adaptive policy would starve the fetch
+    width) while the corrected EMA stays pinned at the true mass; the
+    run cap keeps the inversion finite far past the horizon."""
+    from repro.telemetry import recorder as rmod
+    rec = TraceRecorder(capacity=256)
+    true_mass = 0.55
+    for n in range(1, 101):
+        rec.append(dict(sector_coverage=0.5,
+                        attn_mass=_biased_raw(
+                            true_mass, min(n, rmod.PROBE_RUN_CAP),
+                            rmod.PROBE_DECAY)))
+    assert rec.ema["attn_mass_raw"] > 0.95  # the uncorrected drift
+    assert rec.ema["attn_mass"] == pytest.approx(true_mass, abs=1e-6)
+    # even a run far past the cap stays finite and in (0, 1)
+    assert 0.0 < rec.window()[-1]["attn_mass"] < 1.0
+    with pytest.raises(ValueError, match="probe_decay"):
+        TraceRecorder(probe_decay=0.0)
+
+
+# -- eviction / resumed-prefill accounting ------------------------------------
+
+
+def test_eviction_and_resume_accounting():
+    meter = WaveMeter(GEOM)
+    meter.record_prefill(0, 12)
+    meter.record_eviction(0, kv_tokens=14, kv_pages=4)
+    meter.record_prefill(0, 14, resumed=True)
+    assert meter.totals["evictions"] == 1
+    assert meter.totals["evicted_pages"] == pytest.approx(4.0)
+    assert meter.totals["resumed_prefills"] == 1
+    assert meter.per_request[0]["evictions"] == 1
+    # the re-prefill is charged in full and token counts accumulate:
+    # the energy cost of an eviction IS the resumed prefill
+    assert meter.per_request[0]["prefill_tokens"] == 26
+    assert meter.totals["prefill_j"] > 0.0
+
+
+def test_metered_session_attributes_preemption_energy():
+    """A pool-constrained metered session: evictions and resumed
+    prefills show up on the meter, and re-prefilled tokens make the
+    contended run cost strictly more than the uncontended one."""
+    from repro.serve import KVPagePool
+
+    def _sum_backend():
+        def prefill_fn(tokens):
+            B, S = tokens.shape
+            s = jnp.sum(tokens, axis=1).astype(jnp.int32)
+            return (jax.nn.one_hot(s % VOCAB, VOCAB),
+                    dict(s=s, kv=jnp.zeros((B, 8), jnp.float32)))
+
+        def decode_fn(state, token):
+            s = state["s"] + token[:, 0]
+            return (jax.nn.one_hot(s % VOCAB, VOCAB),
+                    dict(s=s, kv=state["kv"]))
+
+        return ServingBackend(prefill_fn, decode_fn, vocab=VOCAB)
+
+    def run(pool):
+        backend = MeteredBackend(_sum_backend(), geometry=GEOM)
+        sess = ServeSession(backend, max_batch=4, page_pool=pool)
+        reqs = [Request(rid, np.asarray([rid + 1, 2, 3, 5], np.int32),
+                        max_new_tokens=8) for rid in range(2)]
+        handles = [sess.submit(r) for r in reqs]
+        sess.run_until_drained()
+        return sess, backend.meter, [h.peek() for h in handles]
+
+    free_sess, free_meter, free_streams = run(None)
+    sess, meter, streams = run(KVPagePool(4, page_size=4))
+    assert sess.stats["preemptions"] > 0
+    assert meter.totals["evictions"] == sess.stats["preemptions"]
+    assert meter.totals["resumed_prefills"] > 0
+    assert meter.totals["evicted_pages"] > 0.0
+    assert streams == free_streams  # accounting never bends the tokens
+    assert meter.totals["prefill_j"] > free_meter.totals["prefill_j"]
+    per_req = sum(meter.per_request[rid]["energy_j"] for rid in (0, 1))
+    assert per_req == pytest.approx(meter.energy_j)
