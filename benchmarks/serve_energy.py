@@ -17,6 +17,14 @@ Expected ordering (asserted; the CI gate rides on the adaptive-vs-dense
 leg): adaptive J/token <= static J/token <= dense J/token. Results land in
 ``BENCH_energy.json`` (git-stamped via ``benchmarks.common``).
 
+A second, prefix-sharing scenario reruns the same backend with the
+cross-request ``PrefixCache`` at three sharing levels (0, 256, 519 of a
+520-token prompt): request 0 cold-inserts its full prompt, requests 1-3
+hit it and decode as a 3-reader shared group, so warm admissions skip the
+matched prefill span and every wave amortizes the shared-span fetch.
+Asserted: J/token strictly decreasing with hit rate, and >= 20% lower at
+the highest sharing level than cold (``prefix`` key in the payload).
+
 Run: PYTHONPATH=src python benchmarks/serve_energy.py [--smoke]
 """
 
@@ -32,8 +40,8 @@ from repro.core import metrics
 from repro.models import model
 from repro.runtime import sectored_decode
 from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
-                         FifoScheduler, OverlapScheduler, Request,
-                         ServeSession)
+                         FifoScheduler, OverlapScheduler, PrefixCache,
+                         Request, ServeSession)
 from repro.telemetry import MeteredBackend
 
 try:
@@ -87,6 +95,60 @@ def run_config(name, inner, cfg, *, scheduler, max_batch, n_requests,
     return report
 
 
+def run_prefix_scenario(inner, cfg, *, prompt_len, max_new_tokens,
+                        share_levels=(0, 256, 519), n_requests=4):
+    """Prefix-sharing sweep: J/token vs cross-request hit rate.
+
+    Each level runs a fresh ``PrefixCache`` over the SAME backend: request
+    0 cold-inserts its full prompt, the rest share its first
+    ``share`` tokens, so they admit warm (suffix-only prefill) and decode
+    as one shared-fetch group. Level 0 is the cold baseline — identical
+    machinery, zero hits."""
+    out = []
+    for share in share_levels:
+        rng = np.random.default_rng(1)
+        common = rng.integers(0, cfg.vocab, size=share).astype(np.int32)
+        reqs = []
+        for rid in range(n_requests):
+            tail = rng.integers(0, cfg.vocab,
+                                size=prompt_len - share).astype(np.int32)
+            reqs.append(Request(rid, np.concatenate([common, tail]),
+                                max_new_tokens=max_new_tokens))
+        backend = MeteredBackend(inner, sectored_hw=True)
+        cache = PrefixCache(capacity_pages=64)
+        sess = ServeSession(backend, max_batch=n_requests,
+                            scheduler=FifoScheduler(), policy=AlwaysDense(),
+                            prefix_cache=cache)
+        handles = [sess.submit(r) for r in reqs]
+        sess.run_until_drained()
+        assert all(h.done for h in handles)
+        report = backend.meter.report()
+        jpt = metrics.dram_energy_per_token(report["energy_j"],
+                                            report["tokens"])
+        out.append(dict(
+            share_tokens=share,
+            hit_rate=round(cache.hit_rate, 4),
+            hits=cache.stats["hits"],
+            j_per_token=jpt,
+            energy_j=report["energy_j"],
+            tokens=report["tokens"],
+            prefill_tokens=report["prefill_tokens"],
+            prefix_hit_tokens=report["prefix_hit_tokens"],
+            prefilled_tokens=(report["prefill_tokens"]
+                              - report["prefix_hit_tokens"]),
+            shared_act_j=report["shared_act_j"],
+            shared_rd_j=report["shared_rd_j"],
+        ))
+        r = out[-1]
+        print(f"prefix share={share:4d} hit_rate={r['hit_rate']:.2f} "
+              f"{r['j_per_token'] * 1e6:8.3f} uJ/token "
+              f"prefilled={r['prefilled_tokens']} "
+              f"(skipped {r['prefix_hit_tokens']}) "
+              f"shared_fetch_credit="
+              f"{(r['shared_act_j'] + r['shared_rd_j']) * 1e3:.3f} mJ")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -124,9 +186,13 @@ def main(argv=None):
               f"pages={r['pages_fetched']:.1f}/{r['pages_valid']:.1f} "
               f"acts={r['acts']}")
 
+    prefix_rows = run_prefix_scenario(inner, cfg, prompt_len=prompt_len,
+                                      max_new_tokens=max_new_tokens)
+
     dense_jpt = reports["dense"]["j_per_token"]
     static_jpt = reports["static"]["j_per_token"]
     adaptive_jpt = reports["adaptive"]["j_per_token"]
+    cold_jpt = prefix_rows[0]["j_per_token"]
     result = dict(
         arch=cfg.name, scheduler=args.scheduler, smoke=args.smoke,
         seq_len=SEQ_LEN, prompt_len=prompt_len,
@@ -140,6 +206,11 @@ def main(argv=None):
         sector_coverage={k: reports[k]["sector_coverage"] for k in reports},
         savings_vs_dense={k: round(1.0 - reports[k]["j_per_token"] / dense_jpt, 4)
                           for k in ("static", "adaptive")},
+        prefix=dict(
+            levels=prefix_rows,
+            reduction_vs_cold=[round(1.0 - r["j_per_token"] / cold_jpt, 4)
+                               for r in prefix_rows],
+        ),
     )
     out = common.write_bench_json(args.out, result)
     print(f"wrote {out}")
@@ -153,6 +224,24 @@ def main(argv=None):
     if static_jpt > dense_jpt:
         raise SystemExit("FAIL: static-sectored J/token exceeds dense")
     print("OK: adaptive <= static-sectored <= dense J/token")
+
+    jpts = [r["j_per_token"] for r in prefix_rows]
+    steps = [r["prefilled_tokens"] for r in prefix_rows]
+    if any(b >= a for a, b in zip(jpts, jpts[1:])):
+        raise SystemExit(
+            f"FAIL: prefix-cache J/token not strictly decreasing with "
+            f"hit rate: {[f'{j * 1e6:.3f}' for j in jpts]}")
+    if any(b >= a for a, b in zip(steps, steps[1:])):
+        raise SystemExit(
+            f"FAIL: prefilled tokens not strictly decreasing with "
+            f"sharing: {steps}")
+    top_cut = result["prefix"]["reduction_vs_cold"][-1]
+    if top_cut < 0.20:
+        raise SystemExit(
+            f"FAIL: highest-sharing prefix run saves only {top_cut:.1%} "
+            f"J/token vs cold (need >= 20%)")
+    print(f"OK: prefix-cache J/token monotone in hit rate "
+          f"({top_cut:.1%} below cold at share={prefix_rows[-1]['share_tokens']})")
 
 
 if __name__ == "__main__":

@@ -31,10 +31,20 @@ enough to force preemptions — eviction + resume re-prefill must be
 invisible in the streams. The preemption legs assert preemptions > 0,
 so the oracle cannot silently pass by never contending.
 
+**Prefix-cache oracle** (the shared-system-prompt mix): every request
+carries the same 24-token system prompt plus an 8-token unique tail, so
+a warm ``PrefixCache`` serves one complete shared page per admission and
+copy-on-writes the partial one. Cold (no cache) and warm runs of the
+same trace must emit bit-identical streams across {fifo, overlap} x
+{uncontended, preempting pool} with greedy+sampled requests mixed in —
+SystemExit on any divergence. A metered cold-vs-warm pair then reports
+the J/token drop and hit rate. ``--prefix-only`` runs just this section
+(the CI smoke leg).
+
 Results land in ``BENCH_traffic.json`` (git-stamped via
 ``benchmarks.common``).
 
-Run: PYTHONPATH=src python benchmarks/traffic.py [--smoke]
+Run: PYTHONPATH=src python benchmarks/traffic.py [--smoke] [--prefix-only]
 """
 
 from __future__ import annotations
@@ -51,8 +61,8 @@ from repro.models import model
 from repro.runtime import sectored_decode
 from repro.sample import SamplerSpec
 from repro.serve import (AlwaysDense, FifoScheduler, HysteresisPolicy,
-                         KVPagePool, OverlapScheduler, Request, ServeSession,
-                         StreamTruncated)
+                         KVPagePool, OverlapScheduler, PrefixCache, Request,
+                         ServeSession, StreamTruncated)
 from repro.telemetry import MeteredBackend
 
 try:
@@ -73,6 +83,11 @@ SHAPE_MIX = (
     ((16, 12), 0.3),  # balanced
 )
 STOP_TOKENS = (5, 9)  # arbitrary ids < the reduced vocab (128)
+#: shared-system-prompt mix: 24 common tokens + 8 unique — one complete
+#: shared pool page (16 tokens) per warm admission plus a copy-on-write
+#: partial page, the smallest shape that exercises both sharing paths
+PREFIX_SYSTEM_LEN = 24
+PREFIX_TAIL_LEN = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,9 +167,45 @@ def _materialize(tr: TraceRequest, vocab: int,
                    sampler=sampler, stop_tokens=tr.stop_tokens)
 
 
+def make_prefix_trace(*, n_requests: int, seed: int, temperature: float,
+                      sample_every: int = 3) -> list[TraceRequest]:
+    """Shared-system-prompt trace: poisson arrivals, every prompt 24
+    system + 8 unique tail, mixed output lengths, every
+    ``sample_every``'th request sampled."""
+    rng = np.random.default_rng(seed + 7)
+    steps = _arrival_steps("poisson", n_requests, rng)
+    max_news = rng.choice([6, 12, 20], size=n_requests)
+    trace = []
+    for rid, (step, max_new) in enumerate(zip(steps, max_news)):
+        sampled = temperature > 0 and rid % sample_every == 0
+        trace.append(TraceRequest(
+            rid=rid, arrival_step=int(step),
+            prompt_len=PREFIX_SYSTEM_LEN + PREFIX_TAIL_LEN,
+            max_new_tokens=int(max_new), stop_tokens=STOP_TOKENS,
+            sampler_seed=(seed * 1000 + rid) if sampled else None))
+    return trace
+
+
+def _materialize_prefix(tr: TraceRequest, vocab: int,
+                        temperature: float) -> Request:
+    """Shared-system-prompt materializer: one fixed 24-token system
+    prompt (keyed on nothing) + an 8-token tail keyed on ``rid``."""
+    system = np.random.default_rng(100_001).integers(
+        0, vocab, size=PREFIX_SYSTEM_LEN).astype(np.int32)
+    tail = np.random.default_rng(100_003 + tr.rid).integers(
+        0, vocab, size=PREFIX_TAIL_LEN).astype(np.int32)
+    sampler = None
+    if tr.sampler_seed is not None:
+        sampler = SamplerSpec(temperature=temperature,
+                              seed=tr.sampler_seed)
+    return Request(tr.rid, np.concatenate([system, tail]),
+                   max_new_tokens=tr.max_new_tokens,
+                   sampler=sampler, stop_tokens=tr.stop_tokens)
+
+
 def run_trace(sess: ServeSession, trace: list[TraceRequest], *,
               vocab: int, temperature: float = 0.0,
-              max_steps: int = 10_000) -> dict:
+              max_steps: int = 10_000, materialize=_materialize) -> dict:
     """Drive one session through a trace on the virtual step clock.
 
     Each tick submits every request whose arrival step has come, then
@@ -172,7 +223,7 @@ def run_trace(sess: ServeSession, trace: list[TraceRequest], *,
         while i < len(pending) and pending[i].arrival_step <= step:
             tr = pending[i]
             handles[tr.rid] = sess.submit(
-                _materialize(tr, vocab, temperature))
+                materialize(tr, vocab, temperature))
             arrival[tr.rid] = step
             i += 1
         sess.step()
@@ -220,7 +271,8 @@ def _make_backend(arch: str):
 
 
 def _oracle_session(backend, scheduler: str, pool_pages: int | None,
-                    max_batch: int) -> ServeSession:
+                    max_batch: int,
+                    prefix_cache: PrefixCache | None = None) -> ServeSession:
     sched = (OverlapScheduler() if scheduler == "overlap"
              else FifoScheduler())
     pool = (None if pool_pages is None
@@ -229,7 +281,8 @@ def _oracle_session(backend, scheduler: str, pool_pages: int | None,
     # which is exactly what the oracle asserts (the sectored top-k path
     # is occupancy-dependent by design)
     return ServeSession(backend, max_batch=max_batch, scheduler=sched,
-                        policy=AlwaysDense(), page_pool=pool)
+                        policy=AlwaysDense(), page_pool=pool,
+                        prefix_cache=prefix_cache)
 
 
 def run_oracle(backend, trace, *, vocab: int, temperature: float,
@@ -268,6 +321,101 @@ def run_oracle(backend, trace, *, vocab: int, temperature: float,
                 f"FAIL: oracle leg {name} never preempted — shrink the "
                 f"pool so the capacity oracle actually contends")
     return legs
+
+
+def run_prefix_oracle(backend, trace, *, vocab: int, temperature: float,
+                      pool_pages: int, max_batch: int = 4) -> dict:
+    """Cold-vs-warm determinism: the prefix cache must be invisible in
+    the streams.
+
+    For each of {fifo, overlap} x {uncontended, small pool}, the same
+    shared-system-prompt trace runs twice — without a cache and with a
+    warm ``PrefixCache`` — and the per-request token streams must be
+    bit-identical (greedy and sampled alike). The contended cold legs
+    must preempt and the warm legs must actually hit, so neither half of
+    the oracle can pass vacuously. SystemExit on any violation.
+    """
+    legs = {}
+    for scheduler in ("fifo", "overlap"):
+        for pool in (None, pool_pages):
+            name = f"{scheduler}/{'unbounded' if pool is None else pool}"
+            streams = {}
+            leg: dict = {}
+            cache = None
+            for mode in ("cold", "warm"):
+                cache = (None if mode == "cold" else
+                         PrefixCache(capacity_pages=32,
+                                     page_size=POOL_PAGE_SIZE))
+                sess = _oracle_session(backend, scheduler, pool, max_batch,
+                                       prefix_cache=cache)
+                out = run_trace(sess, trace, vocab=vocab,
+                                temperature=temperature,
+                                materialize=_materialize_prefix)
+                streams[mode] = {rid: tuple(h.peek())
+                                 for rid, h in out["handles"].items()}
+                leg[f"{mode}_preemptions"] = out["stats"]["preemptions"]
+                leg[f"{mode}_steps"] = out["steps"]
+            if streams["warm"] != streams["cold"]:
+                diff = [rid for rid in streams["cold"]
+                        if streams["warm"][rid] != streams["cold"][rid]]
+                raise SystemExit(
+                    f"FAIL: warm prefix-cache streams diverge from cold "
+                    f"on {name} (rids {diff[:8]})")
+            leg["hits"] = cache.stats["hits"]
+            leg["hit_rate"] = round(cache.hit_rate, 4)
+            leg["cow_copies"] = cache.stats["cow_copies"]
+            leg["shed_pages"] = cache.stats["shed_pages"]
+            if pool is None and cache.stats["hits"] == 0:
+                # contended legs MAY legitimately shed every entry before
+                # the next arrival (active streams outrank the cache), but
+                # an uncontended leg that never hits tested nothing
+                raise SystemExit(
+                    f"FAIL: prefix oracle leg {name} never hit the cache "
+                    f"— the warm half of the oracle tested nothing")
+            legs[name] = leg
+    contended = [n for n in legs if not n.endswith("unbounded")]
+    if all(legs[n]["cold_preemptions"] == 0 for n in contended):
+        raise SystemExit(
+            "FAIL: no contended prefix-oracle leg preempted — shrink the "
+            "pool so the capacity half actually contends")
+    return legs
+
+
+def run_prefix_metered(backend, trace, *, vocab: int, temperature: float,
+                       scheduler: str = "fifo", max_batch: int = 4) -> dict:
+    """Metered cold-vs-warm pair on the shared-system-prompt trace:
+    J/token with and without the prefix cache, plus hit-rate and
+    shared-fetch attribution. Asserts warm strictly beats cold."""
+    out = {}
+    for mode in ("cold", "warm"):
+        cache = (None if mode == "cold" else
+                 PrefixCache(capacity_pages=32, page_size=POOL_PAGE_SIZE))
+        metered = MeteredBackend(backend)
+        sched = (OverlapScheduler() if scheduler == "overlap"
+                 else FifoScheduler())
+        sess = ServeSession(metered, max_batch=max_batch, scheduler=sched,
+                            policy=AlwaysDense(), prefix_cache=cache)
+        run = run_trace(sess, trace, vocab=vocab, temperature=temperature,
+                        materialize=_materialize_prefix)
+        report = metered.meter.report()
+        out[mode] = dict(
+            j_per_token=metrics.dram_energy_per_token(report["energy_j"],
+                                                      report["tokens"]),
+            energy_j=report["energy_j"], tokens=report["tokens"],
+            steps=run["steps"],
+            prefix_hit_tokens=report["prefix_hit_tokens"],
+            shared_act_j=report["shared_act_j"],
+            shared_rd_j=report["shared_rd_j"],
+            hit_rate=round(cache.hit_rate, 4) if cache else 0.0,
+        )
+    reduction = 1.0 - out["warm"]["j_per_token"] / out["cold"]["j_per_token"]
+    out["j_per_token_reduction"] = round(reduction, 4)
+    if reduction <= 0:
+        raise SystemExit(
+            f"FAIL: warm prefix-cache J/token did not beat cold "
+            f"({out['warm']['j_per_token']:.3e} vs "
+            f"{out['cold']['j_per_token']:.3e})")
+    return out
 
 
 def run_metered(backend, trace, *, vocab: int, temperature: float,
@@ -314,6 +462,12 @@ def main(argv=None):
                          f"(pages of {POOL_PAGE_SIZE} tokens); must be "
                          "tight enough that the trace actually preempts "
                          "(the oracle refuses a contention-free run)")
+    ap.add_argument("--prefix-pool-pages", type=int, default=6,
+                    help="small-pool capacity for the contended prefix-"
+                         "oracle legs (the cold run must preempt there)")
+    ap.add_argument("--prefix-only", action="store_true",
+                    help="run only the prefix-cache oracle + metered "
+                         "cold-vs-warm pair (the CI smoke leg)")
     ap.add_argument("--out", default="BENCH_traffic.json")
     args = ap.parse_args(argv)
 
@@ -322,7 +476,40 @@ def main(argv=None):
                 else ("poisson", "bursty", "diurnal"))
     cfg, backend = _make_backend(args.arch)
 
-    # determinism oracle first: scheduler- and preemption-invariance of
+    # prefix-cache oracle: cold-vs-warm stream identity on the
+    # shared-system-prompt mix, then the metered J/token comparison
+    prefix_trace = make_prefix_trace(n_requests=n_requests, seed=args.seed,
+                                     temperature=args.temperature)
+    prefix_oracle = run_prefix_oracle(backend, prefix_trace,
+                                      vocab=cfg.vocab,
+                                      temperature=args.temperature,
+                                      pool_pages=args.prefix_pool_pages)
+    print("prefix oracle: warm streams bit-identical to cold across "
+          + ", ".join(prefix_oracle) + " (hit rates "
+          + ", ".join(f"{v['hit_rate']:.2f}"
+                      for v in prefix_oracle.values()) + ")")
+    prefix_metered = run_prefix_metered(backend, prefix_trace,
+                                        vocab=cfg.vocab,
+                                        temperature=args.temperature)
+    print(f"prefix metered: cold "
+          f"{prefix_metered['cold']['j_per_token'] * 1e6:.3f} -> warm "
+          f"{prefix_metered['warm']['j_per_token'] * 1e6:.3f} uJ/token "
+          f"({prefix_metered['j_per_token_reduction']:.1%} lower, "
+          f"hit_rate={prefix_metered['warm']['hit_rate']:.2f})")
+    prefix_payload = dict(
+        system_len=PREFIX_SYSTEM_LEN, tail_len=PREFIX_TAIL_LEN,
+        pool_pages=args.prefix_pool_pages, oracle=prefix_oracle,
+        metered=prefix_metered,
+    )
+    if args.prefix_only:
+        payload = dict(arch=cfg.name, smoke=args.smoke, seed=args.seed,
+                       temperature=args.temperature, n_requests=n_requests,
+                       pool_page_size=POOL_PAGE_SIZE, prefix=prefix_payload)
+        out = common.write_bench_json(args.out, payload)
+        print(f"wrote {out}")
+        return
+
+    # determinism oracle: scheduler- and preemption-invariance of
     # the token streams on the exact path, on the poisson trace
     oracle_trace = make_trace("poisson", n_requests=n_requests,
                               seed=args.seed, temperature=args.temperature)
@@ -357,7 +544,7 @@ def main(argv=None):
         pool_pages=args.pool_pages, pool_page_size=POOL_PAGE_SIZE,
         shape_mix=[dict(prompt_len=s[0], max_new_tokens=s[1], weight=w)
                    for s, w in SHAPE_MIX],
-        oracle=oracle, patterns=results,
+        oracle=oracle, patterns=results, prefix=prefix_payload,
     )
     out = common.write_bench_json(args.out, payload)
     print(f"wrote {out}")

@@ -32,6 +32,13 @@ background/refresh component). ``--policy adaptive`` runs the
 coverage-driven ``AdaptiveSectorPolicy`` over the meter's recorder
 (implies ``--telemetry``).
 
+``--prefix-cache`` (needs ``--true-sectored``) enables the cross-request
+radix prefix cache: admission matches each prompt against previously
+prefilled prompts, seeds the slot from the shared entry's read-only KV,
+and re-prefills only the unmatched suffix. ``--shared-prefix N`` prepends
+N common tokens to every generated prompt so the cache demonstrably hits;
+the end-of-run line grows hit-rate / shared-page / CoW columns.
+
 Sampling (``--temperature`` > 0 turns it on): each request gets a
 ``SamplerSpec(temperature, top_k, top_p, seed=--seed + rid)`` — the
 per-request seed derivation is printed as a provenance column so any
@@ -56,8 +63,8 @@ from repro.runtime import sectored_decode
 from repro.sample import SamplerSpec
 from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
                          EngineConfig, FifoScheduler, HysteresisPolicy,
-                         KVPagePool, MeshBackend, OverlapScheduler, Request,
-                         ServeSession, ServingBackend)
+                         KVPagePool, MeshBackend, OverlapScheduler,
+                         PrefixCache, Request, ServeSession, ServingBackend)
 from repro.serve import engine as engine_mod  # noqa: F401  (legacy re-export)
 from repro.telemetry import KVGeometry, MeteredBackend
 
@@ -110,7 +117,8 @@ def build_session(cfg, params, *, max_batch=4, sectored=True,
                   scheduler="fifo", vectorized=True, true_sectored=False,
                   seq_len=256, telemetry=False, policy="hysteresis",
                   mesh=None, bg_energy=False,
-                  page_pool: KVPagePool | None = None) -> ServeSession:
+                  page_pool: KVPagePool | None = None,
+                  prefix_cache: PrefixCache | None = None) -> ServeSession:
     backend = build_backend(cfg, params, sectored=sectored,
                             true_sectored=true_sectored, seq_len=seq_len)
     if telemetry or policy == "adaptive":
@@ -141,7 +149,7 @@ def build_session(cfg, params, *, max_batch=4, sectored=True,
     sched = OverlapScheduler() if scheduler == "overlap" else FifoScheduler()
     return ServeSession(backend, max_batch=max_batch, scheduler=sched,
                         policy=pol, vectorized=vectorized,
-                        page_pool=page_pool)
+                        page_pool=page_pool, prefix_cache=prefix_cache)
 
 
 def build_engine(cfg, params, max_batch=4, sectored=True, *,
@@ -213,6 +221,19 @@ def main(argv=None):
     ap.add_argument("--kv-page-size", type=int, default=None,
                     help="tokens per pool page (default: the sectored "
                          "runtime's page quantum)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request radix prefix cache: seed admissions "
+                         "from previously prefilled prompts' read-only KV "
+                         "and re-prefill only the suffix (needs "
+                         "--true-sectored: the dense backend has no "
+                         "state_prefix/suffix_prefill hooks)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=64,
+                    help="prefix cache capacity in KV pages (LRU over "
+                         "unreferenced entries; default 64)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend N common tokens to every generated prompt "
+                         "so --prefix-cache demonstrably hits (0 = fully "
+                         "independent prompts)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="shard decode waves over a device mesh, e.g. "
                          "'4x2' (data=4, model=2) or '2' (data only); "
@@ -232,6 +253,15 @@ def main(argv=None):
     if args.kv_page_size is not None and args.kv_pages is None:
         ap.error("--kv-page-size needs --kv-pages (an unbounded pool has "
                  "no page granularity to configure)")
+    if args.prefix_cache and not args.true_sectored:
+        # the dense DecodeState backend cannot seed a slot from a cached
+        # KV prefix (no state_prefix/suffix_prefill) — refuse loudly
+        # instead of silently serving cold
+        ap.error("--prefix-cache needs --true-sectored (the dense backend "
+                 "has no prefix-seeding hooks)")
+    if args.shared_prefix and not args.prefix_cache:
+        ap.error("--shared-prefix needs --prefix-cache (shared tokens "
+                 "without a cache would just be re-prefilled every time)")
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -243,17 +273,28 @@ def main(argv=None):
         pool_kwargs = ({} if args.kv_page_size is None
                        else dict(page_size=args.kv_page_size))
         page_pool = KVPagePool(args.kv_pages, **pool_kwargs)
+    prefix_cache = None
+    if args.prefix_cache:
+        # the cache's page quantum must agree with the pool's so shared
+        # pages are charged consistently (the session enforces this)
+        cache_kwargs = ({} if args.kv_page_size is None
+                        else dict(page_size=args.kv_page_size))
+        prefix_cache = PrefixCache(args.prefix_cache_pages, **cache_kwargs)
     sess = build_session(cfg, params, max_batch=args.max_batch,
                          scheduler=args.scheduler,
                          vectorized=args.engine == "vectorized",
                          true_sectored=args.true_sectored,
                          telemetry=telemetry, policy=args.policy,
                          mesh=args.mesh, bg_energy=args.bg_energy,
-                         page_pool=page_pool)
+                         page_pool=page_pool, prefix_cache=prefix_cache)
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab,
+                          size=args.shared_prefix).astype(np.int32)
     handles = []
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=8 + rid % 5).astype(np.int32)
+        if args.shared_prefix:
+            prompt = np.concatenate([shared, prompt])
         sampler = None
         if args.temperature > 0 and rid % args.sample_every == 0:
             # per-request seed derivation IS the provenance contract:
@@ -273,13 +314,23 @@ def main(argv=None):
     pool_tag = ("" if sess.page_pool is None
                 else f"preemptions={stats['preemptions']} "
                      f"kv_peak_pages={sess.page_pool.peak_pages} ")
+    prefix_tag = ""
+    if sess.prefix_cache is not None:
+        c = sess.prefix_cache
+        prefix_tag = (f"prefix_hits={c.stats['hits']}/"
+                      f"{c.stats['hits'] + c.stats['misses']} "
+                      f"(rate={c.hit_rate:.2f}) "
+                      f"prefix_hit_tokens={c.stats['hit_tokens']} "
+                      f"shared_pages_held={c.held_pages} "
+                      f"cow_copies={c.stats['cow_copies']} "
+                      f"prefix_evictions={c.stats['evictions']} ")
     print(f"arch={cfg.name} engine={args.engine} scheduler={args.scheduler} "
           f"{mesh_tag}completed={stats['completed']} "
           f"decode_steps={stats['decode_steps']} waves={stats['waves']} "
           f"sectored_steps={stats['sectored_steps']} "
           f"merged_slots={stats['merged_slots']} "
           f"overlapped_prefills={stats['overlapped_prefills']} "
-          f"eos_stops={stats['eos_stops']} {pool_tag}"
+          f"eos_stops={stats['eos_stops']} {pool_tag}{prefix_tag}"
           f"kv_bytes_saved_at_32k="
           f"{sectored_decode.bytes_saved_fraction(32768):.2f}")
     if args.temperature > 0:
@@ -325,6 +376,11 @@ def print_energy_report(sess, handles, *, trace_out=None) -> None:
           f"{bg}) "
           f"| {metrics.dram_energy_per_token(report['energy_j'], tokens) * 1e6:.3f} uJ/token "
           f"| wall={report['wall_s']:.3f}s")
+    if report.get("prefix_hit_tokens") or report.get("shared_act_j"):
+        shared_mj = (report["shared_act_j"] + report["shared_rd_j"]) * 1e3
+        print(f"prefix reuse: {report['prefix_hit_tokens']} prompt tokens "
+              f"served from cache; shared-fetch amortization credited "
+              f"{shared_mj:.3f} mJ across co-readers")
     for h in handles[:8]:
         t = h.telemetry
         print(f"  rid={h.rid:3d} tokens={t['tokens']:4d} "

@@ -283,6 +283,7 @@ class SectoredKVBackend(ServingBackend):
         self.pages = ((n_pages(seq_len + 8) + 7) // 8) * 8
         self._k_cache: dict[int, Any] = {}
         self._prefill_cache: dict[int, Any] = {}
+        self._suffix_cache: dict[int, Any] = {}
         # jitted single-token steps: compiled once per token shape, so
         # prefill (on the admission critical path) and looped-wave decode
         # don't pay per-op eager dispatch for a full model traversal
@@ -353,6 +354,64 @@ class SectoredKVBackend(ServingBackend):
             fn = jax.jit(prefill)
             self._prefill_cache[tokens.shape[1]] = fn
         return fn(tokens)
+
+    # -- prefix-cache hooks (serve.prefix.PrefixCache warm admission) ------
+
+    def state_prefix(self, state: SectoredState, n_tokens: int
+                     ) -> SectoredState:
+        """Donor state truncated to its first ``n_tokens`` — metadata only.
+
+        KV rows for positions < n depend only on those n tokens, and the
+        exact-mode attend masks every row >= ``cache.length`` to exactly
+        zero before the softmax max (then zeroes ``e`` again), so stale
+        rows beyond n are bit-invisible; the one-hot append overwrites
+        row n next. JAX arrays are immutable, so aliasing the donor's
+        k/v buffers is safe — only the length/position leaves change.
+        The sector-history table is carried as-is: ``predict_topk`` at
+        k = all pages returns every page in ascending order regardless
+        of table content, so the exact path is table-independent (the
+        sectored top-k path shares the cached table's history, the same
+        approximation the within-wave OR-merge already makes).
+        """
+        n = int(n_tokens)
+        kv = state.kv
+        new_kv = attention.KVCache(k=kv.k, v=kv.v,
+                                   length=jnp.full_like(kv.length, n))
+        return SectoredState(kv=new_kv, table=state.table,
+                             position=jnp.full_like(state.position, n))
+
+    def suffix_prefill(self, state: SectoredState, tokens):
+        """Resume exact-mode prefill from a seeded state (warm admission:
+        only the un-matched prompt suffix is re-prefilled).
+
+        Same scan body as :meth:`_prefill` — the exact-mode decode step —
+        but starting from ``state`` instead of a fresh one, so (seed at
+        n) + (suffix scan) is bitwise the cold full prefill. Jitted per
+        suffix length.
+        """
+        tokens = jnp.asarray(tokens, jnp.int32)
+        fn = self._suffix_cache.get(tokens.shape[1])
+        if fn is None:
+            cfg, params = self.cfg, self.params
+            k_pages = self.pages
+
+            def suffix(state, tokens):
+                logits, state = sectored_decode_step(
+                    params, cfg, state, tokens[:, :1], k_pages)
+
+                def body(carry, tok):
+                    _, state = carry
+                    logits, state = sectored_decode_step(
+                        params, cfg, state, tok[:, None], k_pages)
+                    return (logits, state), None
+
+                (logits, state), _ = jax.lax.scan(
+                    body, (logits, state), tokens[:, 1:].T)
+                return logits, state
+
+            fn = jax.jit(suffix)
+            self._suffix_cache[tokens.shape[1]] = fn
+        return fn(state, tokens)
 
 
 def make_serving_fns(cfg, *, params, seq_len: int,

@@ -25,11 +25,13 @@ Three layers:
 
 from repro.sample.kernel import (MAX_STOP_TOKENS, NO_STOP, SamplerRows,
                                  sample_from_logits, sample_token,
-                                 select_tokens)
+                                 select_tokens, token_logprob,
+                                 token_logprobs)
 from repro.sample.rng import token_key
 from repro.sample.spec import GREEDY, SamplerSpec
 
 __all__ = [
     "GREEDY", "MAX_STOP_TOKENS", "NO_STOP", "SamplerRows", "SamplerSpec",
     "sample_from_logits", "sample_token", "select_tokens", "token_key",
+    "token_logprob", "token_logprobs",
 ]

@@ -18,11 +18,12 @@ All math is f32; ties break toward the lowest index everywhere
 (stable sort, first-max argmax), matching the host ``np.argmax`` the
 greedy path always used.
 
-:class:`SamplerRows` is the wave-side state: six ``(slots,)`` scalars
-per slot (seed, position counter, temperature, top-k, top-p, greedy
-flag), stacked like the KV buffer and scattered at admission. The
-*parameters* live here as data — not as traced Python — so a mixed
-greedy+sampled batch shares one compiled wave.
+:class:`SamplerRows` is the wave-side state: per-slot ``(slots,)``
+scalars (seed, position counter, temperature, top-k, top-p, greedy
+flag, stop set, last-token logprob), stacked like the KV buffer and
+scattered at admission. The *parameters* live here as data — not as
+traced Python — so a mixed greedy+sampled batch shares one compiled
+wave.
 """
 
 from __future__ import annotations
@@ -69,6 +70,13 @@ class SamplerRows:
     # wave-side EOS mask (serve.backend.fused_select_step). Data, not
     # traced Python, so stop/no-stop batches share one compiled wave.
     stop: jax.Array
+    # (S,) f32 log-probability of the token each slot emitted LAST wave,
+    # under the raw (untempered, unfiltered) distribution — the
+    # best-of-n rescoring quantity. Output, not config: the wave writes
+    # it (`token_logprob`), the session reads it alongside the tokens.
+    # Slots that emitted nothing this wave (held/stopped/inactive) carry
+    # a value the host never reads.
+    logp: jax.Array
 
     @classmethod
     def init(cls, n: int) -> "SamplerRows":
@@ -97,6 +105,7 @@ class SamplerRows:
             top_p=jnp.asarray([s.top_p for s in specs], jnp.float32),
             greedy=jnp.asarray([s.is_greedy for s in specs], bool),
             stop=jnp.asarray(stop),
+            logp=jnp.zeros((len(specs),), jnp.float32),
         )
 
     def advance(self, hold=None) -> "SamplerRows":
@@ -115,7 +124,8 @@ class SamplerRows:
 
 jax.tree_util.register_dataclass(
     SamplerRows,
-    ["seed", "pos", "temperature", "top_k", "top_p", "greedy", "stop"],
+    ["seed", "pos", "temperature", "top_k", "top_p", "greedy", "stop",
+     "logp"],
     [])
 
 
@@ -166,6 +176,32 @@ def sample_from_logits(logits, row: SamplerRows):
     return jnp.where(row.greedy, greedy_tok, sampled_tok)
 
 
+def token_logprob(logits, tok):
+    """Log-probability of ``tok`` under one slot's RAW distribution.
+
+    Raw means untempered and unfiltered — best-of-n rescoring wants the
+    model's own log P(token), not the sampler-shaped one, and the greedy
+    and stochastic paths then agree on the quantity by construction.
+    This is THE logprob kernel: the fused wave, ``select_tokens``, the
+    looped reference wave, and prefill first tokens all call it, so the
+    fused == pre-fused oracle extends to logprobs bit-for-bit (same
+    stable log-softmax reduction, same f32 shapes, in every
+    composition).
+    """
+    vec = logits.reshape(-1, logits.shape[-1])[0].astype(jnp.float32)
+    m = jnp.max(vec)
+    return vec[tok] - (m + jnp.log(jnp.sum(jnp.exp(vec - m))))
+
+
+@jax.jit
+def token_logprobs(logits, toks):
+    """Stacked :func:`token_logprob`: ``(slots, 1, vocab)`` logits +
+    ``(slots, ...)`` int tokens -> ``(slots,)`` f32 (host-side helper
+    for paths that already hold tokens, e.g. group prefill)."""
+    return jax.vmap(token_logprob)(logits,
+                                   toks.reshape(logits.shape[0]))
+
+
 @jax.jit
 def select_tokens(logits, rows: SamplerRows):
     """Stacked selection: ``(slots, 1, vocab)`` logits + rows ->
@@ -173,10 +209,14 @@ def select_tokens(logits, rows: SamplerRows):
 
     This is the pre-fused reference path (one extra dispatch after the
     logits wave) and the shape contract of the fused wave's output —
-    both vmap the same per-slot kernel, so they are bit-identical.
+    both vmap the same per-slot kernel, so they are bit-identical. The
+    advanced rows carry each emitted token's raw logprob in ``logp``,
+    mirroring the fused wave's in-executable write.
     """
     toks = jax.vmap(sample_from_logits)(logits, rows)
-    return toks.reshape(logits.shape[0], 1, 1), rows.advance()
+    lps = jax.vmap(token_logprob)(logits, toks)
+    advanced = dataclasses.replace(rows.advance(), logp=lps)
+    return toks.reshape(logits.shape[0], 1, 1), advanced
 
 
 def sample_token(logits, spec: SamplerSpec | None, position: int = 0) -> int:

@@ -55,6 +55,7 @@ from repro.serve.policy import (AdaptiveSectorPolicy, AlwaysDense,
                                 AlwaysSectored, HysteresisPolicy,
                                 PathDecision, SectorPolicy)
 from repro.serve.pool import KVPagePool
+from repro.serve.prefix import CacheEntry, PrefixCache, PrefixLease
 from repro.serve.scheduler import FifoScheduler, OverlapScheduler, Scheduler
 from repro.serve.session import (PrefillGroup, Request, ServeSession,
                                  StreamHandle, StreamTruncated, make_session,
@@ -66,6 +67,7 @@ __all__ = [
     "Engine", "EngineConfig", "LoopedEngine",
     "AdaptiveSectorPolicy", "AlwaysDense", "AlwaysSectored",
     "HysteresisPolicy", "PathDecision", "SectorPolicy",
+    "CacheEntry", "PrefixCache", "PrefixLease",
     "FifoScheduler", "KVPagePool", "OverlapScheduler", "Scheduler",
     "PrefillGroup", "Request", "SamplerSpec", "ServeSession",
     "StreamHandle", "StreamTruncated", "make_session", "state_signature",

@@ -26,12 +26,13 @@ This module is deliberately leaf-level: it imports nothing from
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Iterator, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-from repro.sample import SamplerRows, sample_from_logits
+from repro.sample import SamplerRows, sample_from_logits, token_logprob
 
 
 @runtime_checkable
@@ -182,7 +183,14 @@ def fused_select_step(fn: Callable, *, sampled: bool = False) -> Callable:
         tok = select(logits, row).reshape(1, 1)
         stopped = jnp.any(token.reshape(-1)[-1] == row.stop)
         tok = jnp.where(stopped, token.reshape(1, 1), tok)
-        return tok, new_state, row.advance(hold=stopped)
+        # per-token logprob rides out in the row (same `token_logprob`
+        # kernel as the pre-fused select_tokens, so the fused ==
+        # pre-fused oracle covers it); a held slot's logp is frozen at
+        # 0 like its token/counter — the host never reads it
+        lp = jnp.where(stopped, jnp.float32(0.0),
+                       token_logprob(logits, tok.reshape(())))
+        advanced = row.advance(hold=stopped)
+        return tok, new_state, dataclasses.replace(advanced, logp=lp)
 
     return fused
 

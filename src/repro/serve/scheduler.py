@@ -184,13 +184,21 @@ class OverlapScheduler:
         # one stacked (vmapped) prefill per length run, split at length
         # changes so admission order follows submission order; lengths
         # are EFFECTIVE (prompt + generated) so a preempted request's
-        # resume re-prefill groups correctly
+        # resume re-prefill groups correctly. Prefix-cache hits break a
+        # run too: only the session's singleton prefill path can seed
+        # from a shared entry (the vmapped group is all-cold), so a hit
+        # rides alone — order is still preserved, the hit just trades
+        # group batching for skipping most of its prefill
         runs: list[list] = []
+        prev_hit = False
         for handle in taken:
-            if runs and runs[-1][0].prefill_len == handle.prefill_len:
+            hit = session.prefix_hit(handle) > 0
+            if (runs and not hit and not prev_hit
+                    and runs[-1][0].prefill_len == handle.prefill_len):
                 runs[-1].append(handle)
             else:
                 runs.append([handle])
+            prev_hit = hit
         for handles in runs:
             self._ready.append(session.prefill_group(handles))
         if overlapped:

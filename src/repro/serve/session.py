@@ -68,11 +68,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.sample import (MAX_STOP_TOKENS, SamplerRows, SamplerSpec,
-                          sample_token, select_tokens)
+                          sample_token, select_tokens, token_logprobs)
 from repro.serve.backend import (DecodeBackend, ServingBackend,
                                  make_fused_wave)
 from repro.serve.policy import HysteresisPolicy, SectorPolicy
 from repro.serve.pool import KVPagePool
+from repro.serve.prefix import PrefixCache, PrefixLease
 from repro.serve.scheduler import FifoScheduler, Scheduler
 
 PREFIX_KEY_TOKENS = 128  # tokens hashed into the shared-prefix group key
@@ -170,6 +171,12 @@ class StreamHandle:
         self._submit_index = -1
         self._admit_index = -1
         self.preemptions = 0
+        # prefix-cache lease (warm admission): released at finish/preempt
+        self._lease: PrefixLease | None = None
+        # per-token raw logprobs, parallel to _tokens; the prefill token's
+        # is stashed by the prefill path and consumed by _emit_first
+        self._logprobs: list[float] = []
+        self._first_logp = 0.0
 
     @property
     def rid(self) -> int:
@@ -195,6 +202,15 @@ class StreamHandle:
         new = self._tokens[self._cursor:]
         self._cursor += len(new)
         return new
+
+    def logprobs(self) -> list[float]:
+        """Raw (untempered, unfiltered) log-probability of each emitted
+        token, parallel to :meth:`peek` — log P(token | context) under
+        the model's own distribution, the best-of-n rescoring quantity.
+        Computed by one shared kernel (``repro.sample.token_logprob``)
+        on every wave flavor, so the fused == pre-fused == looped
+        equivalence extends to these values."""
+        return list(self._logprobs)
 
     def tokens(self, max_steps: int | None = None) -> Iterator[int]:
         """Yield this request's tokens, stepping the session as needed.
@@ -252,6 +268,7 @@ class ServeSession:
                  policy: SectorPolicy | None = None,
                  vectorized: bool = True, fuse_wave: bool = True,
                  page_pool: KVPagePool | None = None,
+                 prefix_cache: PrefixCache | None = None,
                  max_stream_steps: int = 10_000):
         self.backend = backend
         self.max_batch = max_batch
@@ -262,6 +279,30 @@ class ServeSession:
         # KV capacity model: None = unbounded (every pre-pool behaviour
         # unchanged); a pool gates admission and arms preemption
         self.page_pool = page_pool
+        # cross-request prefix cache (serve.prefix): warm admissions seed
+        # from a shared entry and re-prefill only the prompt suffix. The
+        # backend hooks are discovered like every other optional hook —
+        # but with a cache configured their absence is refused loudly, not
+        # silently degraded: the user asked for sharing the backend can't do
+        self.prefix_cache = prefix_cache
+        self._state_prefix = getattr(backend, "state_prefix", None)
+        self._suffix_prefill = getattr(backend, "suffix_prefill", None)
+        # every handle currently holding a live lease (installed or
+        # prefilled-ahead in a scheduler's ready buffer) — the admission
+        # deadlock breaker needs to enumerate the latter
+        self._leased_handles: set[StreamHandle] = set()
+        if prefix_cache is not None:
+            if self._state_prefix is None or self._suffix_prefill is None:
+                raise ValueError(
+                    f"prefix_cache needs a backend exposing state_prefix() "
+                    f"and suffix_prefill() (SectoredKVBackend does); "
+                    f"{type(backend).__name__} cannot seed a warm admission")
+            if (page_pool is not None
+                    and page_pool.page_size != prefix_cache.page_size):
+                raise ValueError(
+                    f"prefix_cache page_size={prefix_cache.page_size} != "
+                    f"page_pool page_size={page_pool.page_size}: shared and "
+                    f"private pages must account in the same currency")
         # default bound for StreamHandle.tokens()/result() and
         # run_until_drained(); exceeding it raises StreamTruncated
         if max_stream_steps < 1:
@@ -418,16 +459,78 @@ class ServeSession:
         return np.concatenate(
             [prompt, np.asarray(handle._tokens, np.int32)])
 
+    def prefix_hit(self, handle: StreamHandle) -> int:
+        """Peek: tokens a warm admission of this request would reuse
+        (0 = cold). Schedulers use this to route hits to the singleton
+        prefill path — a vmapped group prefill is all-cold by
+        construction. Pure query; the lease is only taken at prefill
+        time, and an entry evicted between peek and prefill just turns
+        the hit back into a cold prefill (safe, never wrong)."""
+        if self.prefix_cache is None or handle._tokens:
+            return 0
+        prompt = np.asarray(handle.request.prompt)
+        _, m = self.prefix_cache.match(prompt, max_match=len(prompt) - 1)
+        return m
+
+    def _prefill_states(self, handle: StreamHandle, prompt: np.ndarray):
+        """Prefill one prompt, warm when the prefix cache can seed it.
+
+        Returns ``(logits, state, lease)``. A warm admission truncates a
+        donor entry's state to the matched length ``m`` (metadata-only —
+        ``state_prefix``) and scans only ``prompt[m:]`` through the same
+        exact-mode step a cold prefill runs (``suffix_prefill``), so the
+        resulting state and logits are bit-identical to the cold path
+        (stale KV rows past ``m`` are masked to exact zero and
+        overwritten by the one-hot append). The match is capped at
+        ``len(prompt) - 1`` so the suffix is never empty — the prefill
+        must emit this request's own first-token logits. Resumed
+        (post-preemption) re-prefills stay cold: their effective prompt
+        includes generated tokens, and the eviction already charged the
+        full rebuild.
+        """
+        lease = None
+        if (self.prefix_cache is not None and not handle._tokens
+                and len(prompt) > 1):
+            lease = self.prefix_cache.acquire(prompt,
+                                              max_match=len(prompt) - 1)
+        if lease is None:
+            logits, state = self.backend.prefill_fn(prompt[None, :])
+            return logits, state, None
+        m = lease.matched_tokens
+        seed = self._state_prefix(lease.entry.state, m)
+        logits, state = self._suffix_prefill(seed, prompt[None, m:])
+        return logits, state, lease
+
     def prefill_one(self, handle: StreamHandle):
         """Blocking single-prompt prefill; returns (first_token, state)."""
         prompt = self.effective_prompt(handle)
-        logits, state = self.backend.prefill_fn(prompt[None, :])
+        logits, state, lease = self._prefill_states(handle, prompt)
+        handle._lease = lease
+        if lease is not None:
+            self._leased_handles.add(handle)
         self.stats["prefill_calls"] += 1
+        if self.prefix_cache is not None and not handle._tokens:
+            # fresh admissions (cold AND warm) insert their full-prompt
+            # post-prefill state — warm inserts deepen the shared prefix;
+            # dedupe just refreshes recency
+            self.prefix_cache.insert(prompt, state)
         if self.meter is not None:
-            self.meter.record_prefill(handle.rid, len(prompt),
-                                      overlapped=self.wave_in_flight,
-                                      resumed=bool(handle._tokens))
-        return self._first_token(handle, logits[0]), state
+            self.meter.record_prefill(
+                handle.rid, len(prompt), overlapped=self.wave_in_flight,
+                resumed=bool(handle._tokens),
+                cached_tokens=lease.matched_tokens if lease else 0)
+        tok = self._first_token(handle, logits[0])
+        handle._first_logp = self._logp_of(logits[0], tok)
+        return tok, state
+
+    @staticmethod
+    def _logp_of(logits_row, tok: int) -> float:
+        """Host-side raw logprob of one chosen token — the same
+        ``token_logprob`` kernel the waves run, jitted at unit batch."""
+        lp = token_logprobs(
+            jnp.asarray(logits_row, jnp.float32).reshape(1, 1, -1),
+            jnp.asarray([int(tok)], jnp.int32))
+        return float(np.asarray(lp)[0])
 
     @staticmethod
     def _first_token(handle: StreamHandle, logits_row) -> int:
@@ -458,7 +561,14 @@ class ServeSession:
                              f"got {sorted(lengths)}")
         self.stats["prefill_calls"] += 1
         if len(handles) == 1:
-            logits, state = self.backend.prefill_fn(prompts[0][None, :])
+            # the one branch that can go warm: a prefix-cache hit seeds
+            # from the shared entry (schedulers route hits here via
+            # prefix_hit — the vmapped group below is all-cold)
+            logits, state, lease = self._prefill_states(handles[0],
+                                                        prompts[0])
+            handles[0]._lease = lease
+            if lease is not None:
+                self._leased_handles.add(handles[0])
             stacked = jax.tree.map(lambda x: x[None], state)
             logits = logits[None]  # (1, 1, vocab)
         else:
@@ -474,11 +584,19 @@ class ServeSession:
                         jax.vmap(lambda p: prefill_fn(p[None, :])))
             stacked_prompts = jnp.asarray(np.stack(prompts), jnp.int32)
             logits, stacked = self._vmapped_prefill(stacked_prompts)
+        if self.prefix_cache is not None:
+            for j, (h, p) in enumerate(zip(handles, prompts)):
+                if not h._tokens:
+                    self.prefix_cache.insert(
+                        p, jax.tree.map(lambda x, j=j: x[j], stacked))
         if self.meter is not None:
             for h, p in zip(handles, prompts):
-                self.meter.record_prefill(h.rid, len(p),
-                                          overlapped=self.wave_in_flight,
-                                          resumed=bool(h._tokens))
+                lease = h._lease
+                self.meter.record_prefill(
+                    h.rid, len(p), overlapped=self.wave_in_flight,
+                    resumed=bool(h._tokens),
+                    cached_tokens=(lease.matched_tokens
+                                   if lease is not None else 0))
         return PrefillGroup(list(handles), logits, stacked,
                             stacked_row_signature(stacked))
 
@@ -580,7 +698,10 @@ class ServeSession:
         else:
             tokens = np.asarray(jnp.argmax(group.logits, axis=-1)).reshape(
                 len(group), -1)[:, 0]
+        lps = np.asarray(token_logprobs(
+            group.logits, jnp.asarray(tokens, jnp.int32)))
         for j, (slot, handle) in enumerate(zip(slots, group.handles)):
+            handle._first_logp = float(lps[j])
             self._emit_first(slot, handle, int(tokens[j]))
 
     def _scatter_sampler_rows(self, slots: list[int], handles) -> None:
@@ -612,14 +733,25 @@ class ServeSession:
         if self.page_pool is not None:
             self.page_pool.observe(self._held_pages_total())
         handle._tokens.append(first_token)
+        handle._logprobs.append(handle._first_logp)
         if first_token in handle._stop:
             self._finish(slot, stopped=True)
         elif len(handle._tokens) >= handle.request.max_new_tokens:
             self._finish(slot)
 
+    def _release_lease(self, handle: StreamHandle) -> None:
+        """Drop a handle's hold on its shared entry (idempotent — safe
+        after a lease-breaking preemption pass already released it)."""
+        if handle._lease is not None:
+            self.prefix_cache.release(handle._lease)
+            handle._lease = None
+        self._leased_handles.discard(handle)
+
     def _finish(self, slot: int, *, stopped: bool = False) -> None:
         handle = self.slots[slot]
         handle.done = True
+        # last reader out frees the shared pages
+        self._release_lease(handle)
         if stopped:
             # EOS: the stop token itself was emitted; the remaining
             # max_new_tokens budget is returned, the slot (and its KV
@@ -640,22 +772,89 @@ class ServeSession:
         """Pages all resident requests hold, each optionally grown by
         ``extra_tokens`` (1 = the append the next wave makes per slot).
         Derived from live slot lengths every call — the accountant can
-        never drift from the truth it accounts."""
-        return sum(
-            self.page_pool.pages_for(h.prefill_len + extra_tokens)
-            for h in self.slots if h is not None)
+        never drift from the truth it accounts.
+
+        With a prefix cache, a leased slot's complete shared pages are
+        charged to the *entry* (once, no matter how many readers), so
+        the slot counts only its private remainder — the CoW partial
+        page plus everything it appends; resident cache entries add
+        their one-time charge on top (``PrefixCache.held_pages``)."""
+        total = 0
+        for h in self.slots:
+            if h is None:
+                continue
+            pages = self.page_pool.pages_for(h.prefill_len + extra_tokens)
+            lease = h._lease
+            if lease is not None and not lease.released:
+                pages = max(pages - lease.shared_pages, 1)
+            total += pages
+        if self.prefix_cache is not None:
+            total += self.prefix_cache.held_pages
+        return total
+
+    def _shed_for(self, held: int) -> int:
+        """Evict unreferenced cache entries until ``held`` fits (pages
+        actually freed returned) — sharing backs off before live work
+        does."""
+        if self.prefix_cache is None:
+            return 0
+        overflow = held - self.page_pool.capacity_pages
+        return self.prefix_cache.shed(overflow) if overflow > 0 else 0
+
+    def _admission_need(self, handle: StreamHandle) -> int:
+        """Pages this handle would hold if installed now (effective
+        prompt + the token the prefill emits). A handle already carrying
+        a live lease (prefilled ahead by the overlap scheduler) charges
+        its *private* remainder only — its complete shared pages are
+        already in ``_held_pages_total`` via the entry's one-time charge,
+        and counting them again would double-book the very pages sharing
+        saved (wedging admission when entries + discounts exactly fill
+        the pool)."""
+        need = self.page_pool.pages_for(handle.prefill_len + 1)
+        lease = handle._lease
+        if lease is not None and not lease.released:
+            need = max(need - lease.shared_pages, 1)
+        return need
+
+    def _break_idle_leases(self) -> int:
+        """Deadlock breaker of last resort: release leases held by
+        handles that are NOT installed in a slot (they sit prefilled in
+        a scheduler's ready buffer). Their entries become sheddable and
+        they re-charge at full need — physically honest, since a warm
+        handle's state aliases immutable arrays and survives its donor
+        entry. Only called when admission is blocked with nothing active
+        to drain: without it, ready-buffer leases can pin exactly the
+        pages admission is waiting for, forever."""
+        installed = {id(h) for h in self.slots if h is not None}
+        broken = 0
+        for h in list(self._leased_handles):
+            if id(h) not in installed:
+                self._release_lease(h)
+                broken += 1
+        return broken
 
     def pool_admits(self, handle: StreamHandle) -> bool:
-        """Can this request be admitted *now*? Its current need (the
-        effective prompt plus the token the prefill emits) must fit next
-        to everyone's current holdings. Deliberately not the worst case:
-        the pool overcommits against future growth and relies on
-        preemption to unwind — that's what lets load beyond capacity
-        degrade instead of serialize."""
+        """Can this request be admitted *now*? Its current need
+        (:meth:`_admission_need`) must fit next to everyone's current
+        holdings. Deliberately not the worst case: the pool overcommits
+        against future growth and relies on preemption to unwind —
+        that's what lets load beyond capacity degrade instead of
+        serialize. The stream oracle is admission-timing-invariant on
+        the exact path, so gating here costs correctness nothing."""
         if self.page_pool is None:
             return True
-        need = self.page_pool.pages_for(handle.prefill_len + 1)
-        return self.page_pool.fits(self._held_pages_total() + need)
+        need = self._admission_need(handle)
+        if self.page_pool.fits(self._held_pages_total() + need):
+            return True
+        self._shed_for(self._held_pages_total() + need)
+        if self.page_pool.fits(self._held_pages_total() + need):
+            return True
+        if (not any(s is not None for s in self.slots)
+                and self._break_idle_leases() > 0):
+            need = self._admission_need(handle)
+            self._shed_for(self._held_pages_total() + need)
+            return self.page_pool.fits(self._held_pages_total() + need)
+        return False
 
     def pool_admit_count(self, handles: list[StreamHandle]) -> int:
         """Longest prefix of ``handles`` admissible together right now
@@ -666,9 +865,20 @@ class ServeSession:
         held = self._held_pages_total()
         n = 0
         for h in handles:
-            need = self.page_pool.pages_for(h.prefill_len + 1)
+            need = self._admission_need(h)
             if not self.page_pool.fits(held + need):
-                break
+                freed = self._shed_for(held + need)
+                held -= freed
+                if (not self.page_pool.fits(held + need) and n == 0
+                        and not any(s is not None for s in self.slots)
+                        and self._break_idle_leases() > 0):
+                    # nothing active to drain, nothing left to shed: the
+                    # blocking pages are pinned by ready-buffer leases
+                    need = self._admission_need(h)
+                    self._shed_for(self._held_pages_total() + need)
+                    held = self._held_pages_total()
+                if not self.page_pool.fits(held + need):
+                    break
             held += need
             n += 1
         return n
@@ -676,15 +886,19 @@ class ServeSession:
     def preempt_overcommitted(self) -> int:
         """Unwind pool overcommit before the next wave grows every slot.
 
-        While the holdings the coming wave produces (each resident slot
-        one token longer) exceed the budget, evict the youngest-admitted
-        request — LIFO victims keep the oldest streams moving, bounding
-        head-of-line latency — and requeue the victims at the queue
-        FRONT in submission order, ahead of never-admitted requests.
-        Never preempts below one active request: a lone request always
-        fits (``submit`` rejected anything that couldn't), so every
-        preemption cycle still emits at least one token and the loop
-        cannot livelock. Returns the number of requests preempted.
+        Pressure is relieved in strict order of what it costs: first
+        **shed** unreferenced prefix-cache entries (LRU; pure accounting,
+        no stream is touched), then evict the youngest-admitted request —
+        LIFO victims keep the oldest streams moving, bounding head-of-line
+        latency — requeueing victims at the queue FRONT in submission
+        order, ahead of never-admitted requests. Never preempts below one
+        active request: a lone request always fits (``submit`` rejected
+        anything that couldn't), so every preemption cycle still emits at
+        least one token and the loop cannot livelock. If the lone
+        survivor still overcommits because its own lease pins a shared
+        entry, the lease is broken as a last resort (physically honest —
+        the slot owns a full copy of its rows), which unpins the entry
+        for the next shed pass. Returns the number of requests preempted.
         """
         if self.page_pool is None:
             return 0
@@ -692,12 +906,20 @@ class ServeSession:
         while True:
             active = [(s, h) for s, h in enumerate(self.slots)
                       if h is not None]
-            if len(active) <= 1:
+            held = self._held_pages_total(extra_tokens=1)
+            if self.page_pool.fits(held):
                 break
-            if self.page_pool.fits(self._held_pages_total(extra_tokens=1)):
-                break
-            slot, _ = max(active, key=lambda sh: sh[1]._admit_index)
-            victims.append(self._preempt(slot))
+            if self._shed_for(held) > 0:
+                continue
+            if len(active) > 1:
+                slot, _ = max(active, key=lambda sh: sh[1]._admit_index)
+                victims.append(self._preempt(slot))
+                continue
+            if (active and active[0][1]._lease is not None
+                    and not active[0][1]._lease.released):
+                self._release_lease(active[0][1])
+                continue
+            break
         if victims:
             for h in sorted(victims, key=lambda h: h._submit_index,
                             reverse=True):
@@ -713,6 +935,9 @@ class ServeSession:
         handle = self.slots[slot]
         handle.preemptions += 1
         handle._admit_index = -1
+        # the resume re-prefill is cold (it rebuilds everything), so the
+        # victim's hold on the shared entry ends here
+        self._release_lease(handle)
         self.slots[slot] = None
         if not self.vectorized:
             self.states[slot] = None
@@ -726,14 +951,45 @@ class ServeSession:
 
     def _group_ids(self) -> np.ndarray:
         """(max_batch,) int32: slots whose requests share a prompt prefix
-        get the same id (the leader slot's index); free slots their own."""
+        get the same id (the leader slot's index); free slots their own.
+
+        Two slots merge when they share the first ``PREFIX_KEY_TOKENS``
+        tokens (the within-wave key) OR hold leases on the same
+        prefix-cache entry — the cross-request extension: warm co-readers
+        attend the same shared pages even when their 128-token keys
+        differ, so one OR-merged sectored fetch serves them all."""
         gids = np.arange(self.max_batch, dtype=np.int32)
-        leaders: dict[bytes, int] = {}
+        leaders: dict[Any, int] = {}
         for slot, handle in enumerate(self.slots):
             if handle is None:
                 continue
-            gids[slot] = leaders.setdefault(handle.request.prefix_key, slot)
+            lease = handle._lease
+            key = (("e", lease.entry.entry_id)
+                   if lease is not None and not lease.released
+                   else ("p", handle.request.prefix_key))
+            gids[slot] = leaders.setdefault(key, slot)
         return gids
+
+    def _shared_groups(self, active: list[int]) -> list[dict] | None:
+        """Co-resident readers of each shared prefix entry, for the
+        meter's shared-fetch amortization: ``[{"slots": [...],
+        "shared_tokens": n}, ...]`` with ``shared_tokens`` the smallest
+        member's complete-page share (groups of one amortize nothing).
+        Host-side lease bookkeeping only — deterministic like every
+        other meter input."""
+        if self.prefix_cache is None:
+            return None
+        by_entry: dict[int, list[tuple[int, int]]] = {}
+        for s in active:
+            lease = self.slots[s]._lease
+            if lease is None or lease.released or lease.shared_tokens <= 0:
+                continue
+            by_entry.setdefault(lease.entry.entry_id, []).append(
+                (s, lease.shared_tokens))
+        groups = [dict(slots=[s for s, _ in members],
+                       shared_tokens=min(t for _, t in members))
+                  for members in by_entry.values() if len(members) >= 2]
+        return groups or None
 
     def _merge_groups(self, active_slots: list[int]) -> np.ndarray:
         """Group ids for a sectored wave + merged_slots accounting, shared
@@ -827,9 +1083,11 @@ class ServeSession:
             if getattr(wave, "returns_tokens", False):
                 # fused pipeline (the default): tokens were selected
                 # on-device — per-slot first-max argmax or the sampling
-                # kernel, bit-identical to the reference paths below
+                # kernel, bit-identical to the reference paths below; the
+                # per-token logprob rode out in the sampler rows
                 next_tok = np.asarray(out).reshape(self.max_batch, -1)[:, 0]
                 self._token_feedback_np = next_tok
+                logps = np.asarray(self._sampler_rows.logp)
             elif sampled:
                 # pre-fused reference (fuse_wave=False): one extra jitted
                 # dispatch applies the SAME per-slot selection kernel to
@@ -838,6 +1096,7 @@ class ServeSession:
                 toks, self._sampler_rows = select_tokens(
                     out, self._sampler_rows)
                 next_tok = np.asarray(toks).reshape(self.max_batch, -1)[:, 0]
+                logps = np.asarray(self._sampler_rows.logp)
             else:
                 # greedy pre-fused wave: the literal pre-fusion baseline
                 # (host argmax over the pulled logits) — the honest
@@ -847,8 +1106,10 @@ class ServeSession:
                 # counter scattered fresh at install
                 next_tok = np.asarray(jnp.argmax(out, axis=-1)).reshape(
                     self.max_batch, -1)[:, 0]
+                logps = np.asarray(token_logprobs(
+                    out, jnp.asarray(next_tok, jnp.int32)))
         else:
-            next_tok = self._run_looped(active, fn)
+            next_tok, logps = self._run_looped(active, fn)
             self.scheduler.overlap(self)
         # wall_s is snapped first so it brackets just dispatch + device
         # drain + overlap — not the telemetry table pull below or the emit
@@ -857,7 +1118,7 @@ class ServeSession:
         wall_s = time.perf_counter() - t0 if self.meter is not None else 0.0
         wave_info = (self._meter_wave_info(active, decision, use_sectored)
                      if self.meter is not None else None)
-        produced = self._emit_wave(active, next_tok, use_sectored)
+        produced = self._emit_wave(active, next_tok, logps, use_sectored)
         if wave_info is not None:
             self.meter.record_wave(wall_s=wall_s, **wave_info)
         return produced
@@ -883,7 +1144,8 @@ class ServeSession:
         views = (self._meter_state_views(active)
                  if use_sectored and k_pages is not None else None)
         return dict(sectored=use_sectored, k_pages=k_pages, slots=slots,
-                    state_views=views)
+                    state_views=views,
+                    shared_groups=self._shared_groups(active))
 
     def _meter_state_views(self, active: list[int]) -> dict | None:
         """Per-slot (table, position) numpy views for the attention-mass
@@ -948,8 +1210,10 @@ class ServeSession:
             out, self.batched = wave(self.batched, tok_in)
         return wave, out
 
-    def _run_looped(self, active: list[int], fn) -> np.ndarray:
+    def _run_looped(self, active: list[int], fn
+                    ) -> tuple[np.ndarray, np.ndarray]:
         next_tok = np.zeros((self.max_batch,), np.int32)
+        logps = np.zeros((self.max_batch,), np.float32)
         for s in active:
             handle = self.slots[s]
             last = jnp.asarray([[handle.last_token]], jnp.int32)
@@ -962,15 +1226,17 @@ class ServeSession:
                 # so far == the position of the one being sampled now
                 next_tok[s] = sample_token(np.asarray(logits[0]), spec,
                                            position=len(handle._tokens))
-        return next_tok
+            logps[s] = self._logp_of(logits[0], int(next_tok[s]))
+        return next_tok, logps
 
     def _emit_wave(self, active: list[int], next_tok: np.ndarray,
-                   use_sectored: bool) -> int:
+                   logps: np.ndarray, use_sectored: bool) -> int:
         produced = 0
         for s in active:
             handle = self.slots[s]
             tok = int(next_tok[s])
             handle._tokens.append(tok)
+            handle._logprobs.append(float(logps[s]))
             produced += 1
             self.stats["decode_steps"] += 1
             if use_sectored:
@@ -1007,6 +1273,7 @@ def make_session(backend_or_fns, *, max_batch: int = 8,
                  vectorized: bool = True,
                  fuse_wave: bool = True,
                  page_pool: KVPagePool | None = None,
+                 prefix_cache: PrefixCache | None = None,
                  max_stream_steps: int = 10_000) -> ServeSession:
     """Convenience constructor accepting a backend or the legacy 4-tuple."""
     if isinstance(backend_or_fns, (tuple, list)):
@@ -1014,5 +1281,5 @@ def make_session(backend_or_fns, *, max_batch: int = 8,
     return ServeSession(backend_or_fns, max_batch=max_batch,
                         scheduler=scheduler, policy=policy,
                         vectorized=vectorized, fuse_wave=fuse_wave,
-                        page_pool=page_pool,
+                        page_pool=page_pool, prefix_cache=prefix_cache,
                         max_stream_steps=max_stream_steps)

@@ -121,7 +121,12 @@ def _zero_totals() -> dict[str, float]:
                 resumed_prefills=0, evictions=0, evicted_pages=0.0,
                 pages_fetched=0.0, pages_valid=0.0, acts=0, sectors=0.0,
                 act_j=0.0, rd_j=0.0, wr_j=0.0, prefill_j=0.0, wall_s=0.0,
-                bg_j=0.0, ref_j=0.0, busy_ns=0.0, demand_merges=0)
+                bg_j=0.0, ref_j=0.0, busy_ns=0.0, demand_merges=0,
+                # prefix-cache attribution (serve.prefix): prompt tokens
+                # whose KV a warm admission reused instead of re-prefilling,
+                # and the decode ACT/RD joules amortized away across
+                # co-resident readers of a shared prefix
+                prefix_hit_tokens=0, shared_act_j=0.0, shared_rd_j=0.0)
 
 
 class WaveMeter:
@@ -206,7 +211,8 @@ class WaveMeter:
 
     def record_prefill(self, rid: int, prompt_len: int, *,
                        overlapped: bool = False,
-                       resumed: bool = False) -> None:
+                       resumed: bool = False,
+                       cached_tokens: int = 0) -> None:
         """One request's prefill: S token appends + ONE exact-mode read
         pass over the final cache (prefill is single-pass in a production
         backend; our per-token reference loop is an implementation detail
@@ -217,19 +223,32 @@ class WaveMeter:
         energy cost of an eviction IS the re-prefill that undoes it — and
         the token it emits is a genuinely new one (the scan's final
         logits predict position ``len(generated)``), so the ``tokens``
-        counters advance exactly as the uncontended run's would."""
+        counters advance exactly as the uncontended run's would.
+
+        ``cached_tokens > 0`` marks a prefix-cache warm admission: the
+        first ``cached_tokens`` of the prompt were seeded from a shared
+        entry, so only the suffix is appended and the read pass scales
+        proportionally (the matched prefix's ACT/RD was paid once, by
+        the request that inserted the entry). ``prefill_tokens`` keeps
+        full-prompt semantics — the reuse shows up in the separate
+        ``prefix_hit_tokens`` counter and in joules, never in the
+        token books the stream oracles audit.
+        """
         g = self.geometry
+        cached = min(max(int(cached_tokens), 0), prompt_len)
+        suffix_frac = (prompt_len - cached) / prompt_len if prompt_len else 1.0
         valid_units = prompt_len / g.page_size
         fetch = power.kv_fetch_energy(valid_units, valid_units,
                                       page_bytes=g.page_kv_bytes,
                                       sectored_hw=self.sectored_hw,
                                       model=self.model)
         joules = g.n_layers * (
-            fetch["act_j"] + fetch["rd_j"]
-            + prompt_len * power.kv_append_energy(g.token_kv_bytes,
-                                                  model=self.model))
+            suffix_frac * (fetch["act_j"] + fetch["rd_j"])
+            + (prompt_len - cached) * power.kv_append_energy(
+                g.token_kv_bytes, model=self.model))
         self.totals["prefill_events"] += 1
         self.totals["prefill_tokens"] += prompt_len
+        self.totals["prefix_hit_tokens"] += cached
         self.totals["prefill_j"] += joules
         self.totals["tokens"] += 1  # the prefill-emitted first token
         if overlapped:
@@ -242,7 +261,8 @@ class WaveMeter:
         req["tokens"] += 1
         if self.background:
             busy_ns, bg_j, ref_j = self._background_charge(
-                fetch["acts"], valid_units, prompt_len)
+                suffix_frac * fetch["acts"], suffix_frac * valid_units,
+                prompt_len - cached)
             self.totals["busy_ns"] += busy_ns
             self.totals["bg_j"] += bg_j
             self.totals["ref_j"] += ref_j
@@ -262,7 +282,9 @@ class WaveMeter:
 
     def record_wave(self, *, sectored: bool, k_pages: int | None,
                     slots: list[tuple[int, int, int]], wall_s: float = 0.0,
-                    state_views: Mapping[int, tuple] | None = None) -> None:
+                    state_views: Mapping[int, tuple] | None = None,
+                    shared_groups: list[Mapping[str, Any]] | None = None
+                    ) -> None:
         """One decode wave.
 
         ``slots`` is ``[(slot, rid, position), ...]`` for the active slots,
@@ -270,8 +292,34 @@ class WaveMeter:
         host-side by the session — no device read). ``state_views``
         optionally maps slot -> ``(table, position)`` numpy views for the
         attention-mass estimate.
+
+        ``shared_groups`` is the prefix-cache shared-fetch attribution
+        input: ``[{"slots": [...], "shared_tokens": int}, ...]`` — each
+        group the co-resident readers of one shared prefix entry, with
+        ``shared_tokens`` the smallest member's complete-page share. The
+        policy is **proportional amortization**: one physical fetch of
+        the shared span serves all ``n`` readers, so each member's ACT
+        and RD (and ``pages_fetched``) scale by ``1 - f*(1 - 1/n)`` where
+        ``f`` is the shared span's fraction of the member's own fetch.
+        Proportional — not sub-fetch decomposition — because the row/ACT
+        accounting in ``kv_fetch_energy`` ceils, and splitting a fetch in
+        two can *raise* its modeled cost; scaling guarantees nonnegative
+        savings and strict monotonicity in both ``f`` and ``n``. Savings
+        accumulate in ``shared_act_j``/``shared_rd_j``. Derived from
+        host-side lease bookkeeping like every other counter, so the
+        scheduler/mesh joule identities extend to shared fetches.
         """
         g = self.geometry
+        share_of: dict[int, tuple[int, float]] = {}
+        for grp in shared_groups or []:
+            members = list(grp["slots"])
+            if len(members) < 2:
+                continue
+            units = float(grp["shared_tokens"]) / g.page_size
+            if units <= 0:
+                continue
+            for s in members:
+                share_of[int(s)] = (len(members), units)
         wave = dict(act_j=0.0, rd_j=0.0, wr_j=0.0, fetched=0.0, valid=0.0,
                     acts=0, sectors=0.0, bg_j=0.0, ref_j=0.0, busy_ns=0.0)
         masses = []
@@ -297,6 +345,15 @@ class WaveMeter:
             rd_j = g.n_layers * fetch["rd_j"]
             wr_j = g.n_layers * power.kv_append_energy(g.token_kv_bytes,
                                                        model=self.model)
+            if slot in share_of and fetched_units > 0:
+                n_readers, shared_units = share_of[slot]
+                share_frac = min(shared_units, fetched_units) / fetched_units
+                keep = 1.0 - share_frac * (1.0 - 1.0 / n_readers)
+                self.totals["shared_act_j"] += act_j * (1.0 - keep)
+                self.totals["shared_rd_j"] += rd_j * (1.0 - keep)
+                act_j *= keep
+                rd_j *= keep
+                fetched_units *= keep
             wave["act_j"] += act_j
             wave["rd_j"] += rd_j
             wave["wr_j"] += wr_j
