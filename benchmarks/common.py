@@ -52,6 +52,20 @@ def write_bench_json(path, payload: dict) -> pathlib.Path:
     return path
 
 
+def trace_export_meta(**extra) -> dict:
+    """Provenance stamp merged into flight-recorder trace exports
+    (JSONL lines / Perfetto metadata) — mirrors the BENCH stamp so trace
+    artifacts are attributable, but versioned on the trace schema.
+
+    Deliberately excludes anything non-deterministic across reruns of
+    the same commit (timestamps, hostnames): byte-identical re-export is
+    part of the observer-effect oracle.
+    """
+    from repro.obs import TRACE_SCHEMA_VERSION
+    return dict(git_commit=git_commit(),
+                trace_schema_version=TRACE_SCHEMA_VERSION, **extra)
+
+
 def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import pathlib
 
 import jax
 import numpy as np
@@ -63,6 +64,8 @@ from repro.sample import SamplerSpec
 from repro.serve import (AlwaysDense, FifoScheduler, HysteresisPolicy,
                          KVPagePool, OverlapScheduler, PrefixCache, Request,
                          ServeSession, StreamTruncated)
+from repro.obs import FlightRecorder, MetricsRegistry, write_jsonl, \
+    write_perfetto
 from repro.telemetry import MeteredBackend
 
 try:
@@ -418,6 +421,113 @@ def run_prefix_metered(backend, trace, *, vocab: int, temperature: float,
     return out
 
 
+def _request_observables(out, handles) -> dict:
+    """Everything the observer-effect oracle compares per request:
+    token streams, raw logprobs, and metered joules."""
+    return dict(
+        tokens={rid: tuple(h.peek()) for rid, h in handles.items()},
+        logprobs={rid: tuple(h.logprobs()) for rid, h in handles.items()},
+        joules={rid: h.energy_j for rid, h in handles.items()},
+        steps=out["steps"],
+    )
+
+
+def run_obs_oracle(backend, trace, prefix_trace, *, vocab: int,
+                   temperature: float, pool_pages: int, max_batch: int = 4,
+                   trace_dir=None, legs: tuple = ("matrix", "prefix"),
+                   quiet: bool = False) -> dict:
+    """The observer-effect oracle: tracing must be invisible.
+
+    Each leg runs the same trace three times — flight recorder off, on,
+    and on again — asserting (1) per-request token streams, logprobs,
+    and metered joules are bit-identical with tracing on vs. off, and
+    (2) the two traced runs serialize byte-identical span sets (the
+    export half of the contract; wall-clock never enters the span
+    model). Legs: the {fifo, overlap} x {uncontended, preempting pool}
+    matrix plus a warm-prefix leg. SystemExit on any violation.
+
+    When ``trace_dir`` is set, one leg per group writes its JSONL +
+    Perfetto exports there (CI uploads them as artifacts).
+    """
+    import json as _json
+
+    summary = {}
+
+    def run_leg(name, scheduler, pool, tr, materialize, warm, export_as):
+        sides = {}
+        serialized = []
+        obs = None
+        for mode in ("off", "on", "on-again"):
+            cache = (PrefixCache(capacity_pages=32,
+                                 page_size=POOL_PAGE_SIZE) if warm else None)
+            obs = FlightRecorder() if mode != "off" else None
+            sess = ServeSession(
+                MeteredBackend(backend), max_batch=max_batch,
+                scheduler=(OverlapScheduler() if scheduler == "overlap"
+                           else FifoScheduler()),
+                policy=AlwaysDense(),
+                page_pool=(None if pool is None else
+                           KVPagePool(pool, page_size=POOL_PAGE_SIZE)),
+                prefix_cache=cache, obs=obs)
+            out = run_trace(sess, tr, vocab=vocab, temperature=temperature,
+                            materialize=materialize)
+            sides[mode] = _request_observables(out, out["handles"])
+            if obs is not None:
+                serialized.append(_json.dumps(obs.spans(), sort_keys=True))
+        for key in ("tokens", "logprobs", "joules", "steps"):
+            if sides["on"][key] != sides["off"][key]:
+                raise SystemExit(
+                    f"FAIL: observer effect — per-request {key} change "
+                    f"when tracing is enabled on leg {name}")
+        if serialized[0] != serialized[1]:
+            raise SystemExit(
+                f"FAIL: two traced runs of leg {name} serialized "
+                f"different span sets — the trace is not deterministic")
+        snap = obs.snapshot()
+        summary[name] = dict(
+            waves=snap["waves"], spans=len(obs.spans()),
+            preemptions=snap.get("preemptions", 0),
+            truncated=snap.get("truncated_streams", 0))
+        if trace_dir is not None and export_as is not None:
+            meta = common.trace_export_meta(bench="traffic", leg=name)
+            p1 = write_jsonl(obs.spans(), trace_dir / f"{export_as}.jsonl",
+                             extra=meta)
+            p2 = write_perfetto(obs.spans(),
+                                trace_dir / f"{export_as}.perfetto.json",
+                                extra=meta)
+            if not quiet:
+                print(f"  trace exported: {p1}, {p2}")
+        return obs
+
+    last_obs = None
+    if "matrix" in legs:
+        for scheduler in ("fifo", "overlap"):
+            for pool in (None, pool_pages):
+                name = (f"{scheduler}/"
+                        f"{'unbounded' if pool is None else pool}")
+                export = (f"trace_traffic_{scheduler}_pool"
+                          if pool is not None and scheduler == "overlap"
+                          else None)
+                last_obs = run_leg(name, scheduler, pool, trace,
+                                   _materialize, False, export)
+        contended = [n for n in summary if not n.endswith("unbounded")]
+        if all(summary[n]["preemptions"] == 0 for n in contended):
+            raise SystemExit(
+                "FAIL: no contended observer-oracle leg preempted — the "
+                "preemption x tracing quadrant tested nothing")
+    if "prefix" in legs:
+        last_obs = run_leg("fifo/warm-prefix", "fifo", None, prefix_trace,
+                           _materialize_prefix, True,
+                           "trace_traffic_warm_prefix")
+    if not quiet:
+        print("observer-effect oracle: streams, logprobs, and joules "
+              "bit-identical with tracing on vs. off across "
+              + ", ".join(summary) + "; traced runs export byte-identical")
+        print("obs metrics (last leg):")
+        print(MetricsRegistry.render(last_obs.snapshot()))
+    return summary
+
+
 def run_metered(backend, trace, *, vocab: int, temperature: float,
                 pool_pages: int | None, scheduler: str = "overlap",
                 max_batch: int = 4) -> dict:
@@ -469,7 +579,12 @@ def main(argv=None):
                     help="run only the prefix-cache oracle + metered "
                          "cold-vs-warm pair (the CI smoke leg)")
     ap.add_argument("--out", default="BENCH_traffic.json")
+    ap.add_argument("--trace-dir", default=".",
+                    help="where the flight-recorder JSONL/Perfetto trace "
+                         "exports land (CI uploads them as artifacts)")
     args = ap.parse_args(argv)
+    trace_dir = pathlib.Path(args.trace_dir)
+    trace_dir.mkdir(parents=True, exist_ok=True)
 
     n_requests = 10 if args.smoke else 24
     patterns = (("poisson", "bursty") if args.smoke
@@ -502,9 +617,14 @@ def main(argv=None):
         metered=prefix_metered,
     )
     if args.prefix_only:
+        obs_oracle = run_obs_oracle(
+            backend, None, prefix_trace, vocab=cfg.vocab,
+            temperature=args.temperature, pool_pages=args.pool_pages,
+            trace_dir=trace_dir, legs=("prefix",))
         payload = dict(arch=cfg.name, smoke=args.smoke, seed=args.seed,
                        temperature=args.temperature, n_requests=n_requests,
-                       pool_page_size=POOL_PAGE_SIZE, prefix=prefix_payload)
+                       pool_page_size=POOL_PAGE_SIZE, prefix=prefix_payload,
+                       obs_oracle=obs_oracle)
         out = common.write_bench_json(args.out, payload)
         print(f"wrote {out}")
         return
@@ -522,6 +642,13 @@ def main(argv=None):
           + ", ".join(str(v['preemptions'])
                       for k, v in oracle.items()
                       if not k.endswith('unbounded')) + ")")
+
+    # observer-effect oracle: the flight recorder must be invisible in
+    # streams/logprobs/joules, and traced runs must export byte-identical
+    obs_oracle = run_obs_oracle(
+        backend, oracle_trace, prefix_trace, vocab=cfg.vocab,
+        temperature=args.temperature, pool_pages=args.pool_pages,
+        trace_dir=trace_dir)
 
     results = {}
     for pattern in patterns:
@@ -544,7 +671,8 @@ def main(argv=None):
         pool_pages=args.pool_pages, pool_page_size=POOL_PAGE_SIZE,
         shape_mix=[dict(prompt_len=s[0], max_new_tokens=s[1], weight=w)
                    for s, w in SHAPE_MIX],
-        oracle=oracle, patterns=results, prefix=prefix_payload,
+        oracle=oracle, obs_oracle=obs_oracle, patterns=results,
+        prefix=prefix_payload,
     )
     out = common.write_bench_json(args.out, payload)
     print(f"wrote {out}")

@@ -1,0 +1,248 @@
+"""Bench-trend gate: compare fresh BENCH_*.json against committed baselines.
+
+Seven PRs of serving machinery produced BENCH files with zero trend
+tracking — a perf or energy regression would land silently. This gate
+closes that hole: CI's bench jobs write fresh smoke-mode BENCH files, and
+``trend.py`` compares them metric-by-metric against the baselines
+committed under ``benchmarks/baselines/``, failing (exit 1) on any
+regression beyond that metric's tolerance band.
+
+Tolerances are per-metric and reflect what the metric is made of:
+
+* **Deterministic metrics** (virtual-step counts, metered joules, hit
+  rates — everything derived from host-side counters) get a near-zero
+  band: they are bit-reproducible for a given commit, so ANY drift is a
+  real behaviour change that should be either fixed or explicitly
+  re-baselined.
+* **Wall-clock metrics** (tokens/sec in BENCH_serve) get a loose band
+  (:data:`WALLCLOCK_REL_TOL`) that absorbs runner noise while still
+  catching a 10% throughput regression (asserted in tests/test_obs.py).
+
+Files absent on either side are skipped with a note (CI's bench jobs
+don't produce BENCH_serve, for example). Improvements never fail the
+gate — they print, and when intentional you refresh the baselines:
+
+    python benchmarks/trend.py --update-baselines
+
+then commit the changed files under ``benchmarks/baselines/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+from dataclasses import dataclass
+
+HERE = pathlib.Path(__file__).resolve().parent
+DEFAULT_BASELINE_DIR = HERE / "baselines"
+
+#: tolerance for deterministic (counter-derived) metrics: bit-reproducible
+#: per commit, so the band only absorbs float-printing jitter
+DETERMINISTIC_REL_TOL = 1e-6
+#: tolerance for wall-clock metrics: wide enough for runner noise, tight
+#: enough that a 10% throughput regression always trips it
+WALLCLOCK_REL_TOL = 0.08
+
+
+@dataclass(frozen=True)
+class Metric:
+    """One gated value: dotted ``path`` into the payload, direction, band."""
+
+    path: str
+    higher_is_better: bool
+    rel_tol: float
+
+    def describe(self) -> str:
+        arrow = "higher" if self.higher_is_better else "lower"
+        return f"{self.path} ({arrow} is better, tol {self.rel_tol:g})"
+
+
+def _det(path: str, *, higher: bool) -> Metric:
+    return Metric(path, higher, DETERMINISTIC_REL_TOL)
+
+
+def _wall(path: str, *, higher: bool) -> Metric:
+    return Metric(path, higher, WALLCLOCK_REL_TOL)
+
+
+#: the gate, per BENCH file. Paths missing from a payload are skipped with
+#: a note (smoke and full runs share the schema, so this mostly covers
+#: schema evolution between PRs).
+SPECS: dict[str, list[Metric]] = {
+    "BENCH_energy.json": [
+        _det("j_per_token.dense", higher=False),
+        _det("j_per_token.static", higher=False),
+        _det("j_per_token.adaptive", higher=False),
+        _det("savings_vs_dense.adaptive", higher=True),
+        _det("sector_coverage.adaptive", higher=False),
+        # warmest level of the shared-prefix sweep: J/token with the cache
+        # hot must not creep up
+        _det("prefix.levels.2.j_per_token", higher=False),
+        _det("prefix.levels.2.hit_rate", higher=True),
+    ],
+    "BENCH_traffic.json": [
+        _det("patterns.poisson.steps", higher=False),
+        _det("patterns.poisson.j_per_token", higher=False),
+        _det("patterns.poisson.ttft_steps.p99", higher=False),
+        _det("patterns.bursty.steps", higher=False),
+        _det("patterns.bursty.j_per_token", higher=False),
+        _det("patterns.diurnal.steps", higher=False),
+        _det("patterns.diurnal.j_per_token", higher=False),
+    ],
+    "BENCH_traffic_prefix.json": [
+        _det("prefix.metered.j_per_token_reduction", higher=True),
+        _det("prefix.metered.warm.j_per_token", higher=False),
+        _det("prefix.oracle.fifo/unbounded.warm_steps", higher=False),
+        _det("prefix.oracle.fifo/unbounded.hit_rate", higher=True),
+    ],
+    "BENCH_serve.json": [
+        _wall("tokens_per_sec.fifo", higher=True),
+        _wall("tokens_per_sec.overlap", higher=True),
+        _wall("tokens_per_sec.sampled", higher=True),
+    ],
+}
+
+
+def lookup(payload: dict, path: str):
+    """Walk a dotted path; numeric components index into lists (the
+    energy bench's ``prefix.levels`` is an ordered sweep)."""
+    node = payload
+    for key in path.split("."):
+        if isinstance(node, list):
+            if not key.isdigit() or int(key) >= len(node):
+                return None
+            node = node[int(key)]
+        elif isinstance(node, dict) and key in node:
+            node = node[key]
+        else:
+            return None
+    return node
+
+
+@dataclass
+class Result:
+    file: str
+    metric: Metric
+    status: str  # ok | improved | regressed | skipped
+    note: str
+    baseline: float | None = None
+    fresh: float | None = None
+
+    def line(self) -> str:
+        tag = {"ok": "  ok  ", "improved": " +++  ",
+               "regressed": " FAIL ", "skipped": " skip "}[self.status]
+        return f"[{tag}] {self.file}:{self.metric.path} {self.note}"
+
+
+def compare_metric(file: str, metric: Metric, baseline: dict,
+                   fresh: dict) -> Result:
+    base = lookup(baseline, metric.path)
+    new = lookup(fresh, metric.path)
+    if base is None or new is None:
+        side = "baseline" if base is None else "fresh"
+        return Result(file, metric, "skipped", f"missing in {side}")
+    base, new = float(base), float(new)
+    scale = max(abs(base), 1e-12)
+    delta = (new - base) / scale
+    signed = delta if metric.higher_is_better else -delta
+    note = f"{base:.6g} -> {new:.6g} ({delta:+.2%})"
+    if signed < -metric.rel_tol:
+        return Result(file, metric, "regressed", note, base, new)
+    if signed > metric.rel_tol:
+        return Result(file, metric, "improved", note, base, new)
+    return Result(file, metric, "ok", note, base, new)
+
+
+def compare_file(name: str, baseline_dir: pathlib.Path,
+                 fresh_dir: pathlib.Path) -> list[Result]:
+    metrics = SPECS[name]
+    base_path = baseline_dir / name
+    fresh_path = fresh_dir / name
+    if not fresh_path.exists():
+        return [Result(name, m, "skipped", "no fresh file") for m in metrics]
+    if not base_path.exists():
+        return [Result(name, m, "skipped", "no baseline (run "
+                       "--update-baselines to seed it)") for m in metrics]
+    baseline = json.loads(base_path.read_text())
+    fresh = json.loads(fresh_path.read_text())
+    bsv = baseline.get("schema_version")
+    fsv = fresh.get("schema_version")
+    if bsv != fsv:
+        # a schema bump re-baselines by definition; comparing across it
+        # would gate on renamed/re-meaning'd fields
+        return [Result(name, m, "skipped",
+                       f"schema_version {bsv} != {fsv} — re-baseline")
+                for m in metrics]
+    return [compare_metric(name, m, baseline, fresh) for m in metrics]
+
+
+def compare_all(baseline_dir: pathlib.Path, fresh_dir: pathlib.Path,
+                files: list[str] | None = None) -> list[Result]:
+    names = files if files else sorted(SPECS)
+    results: list[Result] = []
+    for name in names:
+        if name not in SPECS:
+            raise SystemExit(f"no trend spec for {name!r} "
+                             f"(known: {', '.join(sorted(SPECS))})")
+        results.extend(compare_file(name, baseline_dir, fresh_dir))
+    return results
+
+
+def update_baselines(baseline_dir: pathlib.Path,
+                     fresh_dir: pathlib.Path) -> list[str]:
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    copied = []
+    for name in sorted(SPECS):
+        src = fresh_dir / name
+        if src.exists():
+            shutil.copyfile(src, baseline_dir / name)
+            copied.append(name)
+    return copied
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--baseline-dir", type=pathlib.Path,
+                    default=DEFAULT_BASELINE_DIR,
+                    help="committed baselines (default benchmarks/baselines)")
+    ap.add_argument("--fresh-dir", type=pathlib.Path,
+                    default=pathlib.Path("."),
+                    help="directory holding freshly generated BENCH files")
+    ap.add_argument("--files", nargs="*", default=None,
+                    help="subset of BENCH files to gate (default: all specs)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy fresh BENCH files over the baselines and exit")
+    args = ap.parse_args(argv)
+
+    if args.update_baselines:
+        copied = update_baselines(args.baseline_dir, args.fresh_dir)
+        for name in copied:
+            print(f"baseline updated: {args.baseline_dir / name}")
+        if not copied:
+            print("no fresh BENCH files found — nothing updated",
+                  file=sys.stderr)
+            return 1
+        return 0
+
+    results = compare_all(args.baseline_dir, args.fresh_dir, args.files)
+    for r in results:
+        print(r.line())
+    regressions = [r for r in results if r.status == "regressed"]
+    compared = [r for r in results if r.status != "skipped"]
+    print(f"\ntrend: {len(compared)} compared, "
+          f"{sum(r.status == 'improved' for r in results)} improved, "
+          f"{len(regressions)} regressed, "
+          f"{sum(r.status == 'skipped' for r in results)} skipped")
+    if regressions:
+        print("\nregression detected — if intentional, refresh with:\n"
+              "  python benchmarks/trend.py --update-baselines "
+              "&& git add benchmarks/baselines", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

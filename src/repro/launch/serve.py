@@ -39,6 +39,13 @@ and re-prefills only the unmatched suffix. ``--shared-prefix N`` prepends
 N common tokens to every generated prompt so the cache demonstrably hits;
 the end-of-run line grows hit-rate / shared-page / CoW columns.
 
+``--obs`` attaches the flight recorder (``repro.obs``): per-request span
+tracing on the virtual step clock plus a serving metrics registry, with
+an end-of-run summary table and optional ``--obs-trace-out`` (JSONL) /
+``--obs-perfetto-out`` (Chrome/Perfetto ``trace_event`` JSON) exports.
+Tracing is observer-effect-free: token streams, logprobs, and joules are
+bit-identical with the flag on or off (oracle in benchmarks/traffic.py).
+
 Sampling (``--temperature`` > 0 turns it on): each request gets a
 ``SamplerSpec(temperature, top_k, top_p, seed=--seed + rid)`` — the
 per-request seed derivation is printed as a provenance column so any
@@ -60,6 +67,8 @@ from repro.core import metrics
 from repro.launch import mesh as mesh_mod
 from repro.models import model
 from repro.runtime import sectored_decode
+from repro.obs import (FlightRecorder, MetricsRegistry, write_jsonl,
+                       write_perfetto)
 from repro.sample import SamplerSpec
 from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
                          EngineConfig, FifoScheduler, HysteresisPolicy,
@@ -118,7 +127,8 @@ def build_session(cfg, params, *, max_batch=4, sectored=True,
                   seq_len=256, telemetry=False, policy="hysteresis",
                   mesh=None, bg_energy=False,
                   page_pool: KVPagePool | None = None,
-                  prefix_cache: PrefixCache | None = None) -> ServeSession:
+                  prefix_cache: PrefixCache | None = None,
+                  obs: FlightRecorder | None = None) -> ServeSession:
     backend = build_backend(cfg, params, sectored=sectored,
                             true_sectored=true_sectored, seq_len=seq_len)
     if telemetry or policy == "adaptive":
@@ -149,7 +159,8 @@ def build_session(cfg, params, *, max_batch=4, sectored=True,
     sched = OverlapScheduler() if scheduler == "overlap" else FifoScheduler()
     return ServeSession(backend, max_batch=max_batch, scheduler=sched,
                         policy=pol, vectorized=vectorized,
-                        page_pool=page_pool, prefix_cache=prefix_cache)
+                        page_pool=page_pool, prefix_cache=prefix_cache,
+                        obs=obs)
 
 
 def build_engine(cfg, params, max_batch=4, sectored=True, *,
@@ -190,6 +201,19 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None,
                     help="with --telemetry: dump the per-wave trace JSONL "
                          "here")
+    ap.add_argument("--obs", action="store_true",
+                    help="attach the flight recorder: per-request span "
+                         "tracing on the virtual step clock plus a serving "
+                         "metrics registry rendered at end of run "
+                         "(observer-effect contract: token streams, "
+                         "logprobs, and joules are bit-identical with this "
+                         "flag on or off)")
+    ap.add_argument("--obs-trace-out", default=None, metavar="PATH",
+                    help="with --obs: export the span trace as JSONL")
+    ap.add_argument("--obs-perfetto-out", default=None, metavar="PATH",
+                    help="with --obs: export the span trace as Chrome/"
+                         "Perfetto trace_event JSON (open in ui.perfetto.dev "
+                         "or chrome://tracing)")
     ap.add_argument("--bg-energy", action="store_true",
                     help="with --telemetry: add the modeled background/"
                          "refresh energy component (deterministic, derived "
@@ -250,6 +274,9 @@ def main(argv=None):
         ap.error("--top-k/--top-p/--seed/--sample-every need "
                  "--temperature > 0 (temperature 0 is greedy decoding)")
 
+    if ((args.obs_trace_out or args.obs_perfetto_out) and not args.obs):
+        ap.error("--obs-trace-out/--obs-perfetto-out need --obs (there is "
+                 "no span trace to export without the flight recorder)")
     if args.kv_page_size is not None and args.kv_pages is None:
         ap.error("--kv-page-size needs --kv-pages (an unbounded pool has "
                  "no page granularity to configure)")
@@ -280,13 +307,15 @@ def main(argv=None):
         cache_kwargs = ({} if args.kv_page_size is None
                         else dict(page_size=args.kv_page_size))
         prefix_cache = PrefixCache(args.prefix_cache_pages, **cache_kwargs)
+    obs = FlightRecorder(MetricsRegistry()) if args.obs else None
     sess = build_session(cfg, params, max_batch=args.max_batch,
                          scheduler=args.scheduler,
                          vectorized=args.engine == "vectorized",
                          true_sectored=args.true_sectored,
                          telemetry=telemetry, policy=args.policy,
                          mesh=args.mesh, bg_energy=args.bg_energy,
-                         page_pool=page_pool, prefix_cache=prefix_cache)
+                         page_pool=page_pool, prefix_cache=prefix_cache,
+                         obs=obs)
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab,
                           size=args.shared_prefix).astype(np.int32)
@@ -337,6 +366,9 @@ def main(argv=None):
         print_seed_provenance(handles, base_seed=args.seed)
     if telemetry:
         print_energy_report(sess, handles, trace_out=args.trace_out)
+    if obs is not None:
+        print_obs_report(obs, trace_out=args.obs_trace_out,
+                         perfetto_out=args.obs_perfetto_out)
 
 
 def print_seed_provenance(handles, *, base_seed: int, limit: int = 16) -> None:
@@ -391,6 +423,22 @@ def print_energy_report(sess, handles, *, trace_out=None) -> None:
     if trace_out:
         path = meter.recorder.to_jsonl(trace_out)
         print(f"wrote per-wave trace: {path}")
+
+
+def print_obs_report(obs, *, trace_out=None, perfetto_out=None) -> None:
+    """Flight-recorder summary: the metrics snapshot table plus optional
+    span-trace exports (JSONL and/or Perfetto)."""
+    spans = obs.spans()
+    print("-- flight recorder ---------------------------------------------")
+    print(f"steps={obs.step} spans={len(spans)}")
+    print(MetricsRegistry.render(obs.snapshot()))
+    if trace_out:
+        path = write_jsonl(spans, trace_out)
+        print(f"wrote span trace: {path}")
+    if perfetto_out:
+        path = write_perfetto(spans, perfetto_out)
+        print(f"wrote perfetto trace: {path} "
+              f"(open in ui.perfetto.dev or chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""repro.obs — deterministic serving observability.
+
+:class:`FlightRecorder` traces every request's lifecycle as a span tree
+on the virtual step clock and feeds a :class:`MetricsRegistry`;
+:mod:`repro.obs.export` renders both as JSONL and Perfetto JSON. The
+whole layer is host-side bookkeeping discovered via optional hooks, so
+enabling it cannot perturb token streams, logprobs, or metered joules
+(the observer-effect oracle — see docs/observability.md).
+"""
+
+from .export import (TRACE_SCHEMA_VERSION, US_PER_STEP, to_trace_events,
+                     write_jsonl, write_perfetto)
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .spans import SESSION_TRACK, FlightRecorder
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "FlightRecorder", "SESSION_TRACK",
+    "write_jsonl", "write_perfetto", "to_trace_events",
+    "TRACE_SCHEMA_VERSION", "US_PER_STEP",
+]

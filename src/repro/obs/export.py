@@ -1,0 +1,104 @@
+"""Exporters for FlightRecorder traces: JSONL and Chrome/Perfetto JSON.
+
+Both formats are **byte-deterministic**: spans are written in open order
+(a stable total order assigned at record time), every JSON object is
+serialized with sorted keys, and no wall-clock field exists anywhere in
+the span model — so two runs of the same traffic trace produce identical
+files (asserted by the observer-effect oracle in benchmarks/traffic.py),
+and CI artifacts diff cleanly across commits.
+
+The Perfetto export maps the virtual step clock onto a microsecond
+timeline at :data:`US_PER_STEP` µs per step (Chrome's ``trace_event``
+format requires real time units; the scale is arbitrary and chosen so a
+few hundred steps render comfortably). Open ``chrome://tracing`` or
+https://ui.perfetto.dev and load the file: one named track ("thread")
+per request plus a session track carrying wave spans and counter series.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Iterable, Mapping
+
+#: virtual-step -> microsecond scale for the Perfetto timeline
+US_PER_STEP = 1000
+
+#: trace-export schema rev (bumped with the span/export model, stamped on
+#: every export by benchmarks.common alongside the BENCH schema stamp)
+TRACE_SCHEMA_VERSION = 1
+
+#: counter fields lifted from wave spans into Perfetto counter tracks
+COUNTER_FIELDS = ("occupancy", "pool_pages_held", "energy_j",
+                  "sector_coverage")
+
+
+def _track_key(track) -> tuple:
+    # request tracks (int rids) first in rid order, named tracks after
+    return (0, track, "") if isinstance(track, int) else (1, 0, str(track))
+
+
+def write_jsonl(spans: Iterable[Mapping[str, Any]], path,
+                extra: Mapping[str, Any] | None = None) -> pathlib.Path:
+    """One span per line, open order, sorted keys; ``extra`` metadata
+    fields are merged into every line (run provenance)."""
+    path = pathlib.Path(path)
+    base = dict(extra or {})
+    with path.open("w") as fh:
+        for span in spans:
+            fh.write(json.dumps({**base, **span}, sort_keys=True) + "\n")
+    return path
+
+
+def to_trace_events(spans: Iterable[Mapping[str, Any]],
+                    us_per_step: int = US_PER_STEP) -> list[dict]:
+    """Chrome ``trace_event`` list: complete (``ph:"X"``) spans, instant
+    (``ph:"i"``) events, counter (``ph:"C"``) series from wave spans, and
+    thread-name metadata rows. Still-open spans (``end`` None) are
+    rendered as zero-duration opens at their start step."""
+    spans = list(spans)
+    events: list[dict] = []
+    tracks = sorted({s["track"] for s in spans}, key=_track_key)
+    for track in tracks:
+        tid = tracks.index(track)
+        name = (f"request {track}" if isinstance(track, int)
+                else str(track))
+        events.append({"ph": "M", "name": "thread_name", "pid": 0,
+                       "tid": tid, "args": {"name": name}})
+    tid_of = {track: i for i, track in enumerate(tracks)}
+    for span in spans:
+        tid = tid_of[span["track"]]
+        ts = span["start"] * us_per_step
+        args = dict(span.get("attrs") or {})
+        end = span.get("end")
+        if end is None:
+            args["open"] = True
+            end = span["start"]
+        if end > span["start"]:
+            events.append({"ph": "X", "name": span["name"], "pid": 0,
+                           "tid": tid, "ts": ts,
+                           "dur": (end - span["start"]) * us_per_step,
+                           "args": args})
+        else:
+            events.append({"ph": "i", "name": span["name"], "pid": 0,
+                           "tid": tid, "ts": ts, "s": "t", "args": args})
+        if span["name"] == "wave":
+            for field in COUNTER_FIELDS:
+                value = args.get(field)
+                if value is not None:
+                    events.append({"ph": "C", "name": field, "pid": 0,
+                                   "tid": tid_of[span["track"]], "ts": ts,
+                                   "args": {field: value}})
+    return events
+
+
+def write_perfetto(spans: Iterable[Mapping[str, Any]], path,
+                   extra: Mapping[str, Any] | None = None,
+                   us_per_step: int = US_PER_STEP) -> pathlib.Path:
+    """Write a Perfetto/chrome://tracing JSON object trace; returns path."""
+    path = pathlib.Path(path)
+    payload = {"displayTimeUnit": "ms",
+               "metadata": dict(extra or {}),
+               "traceEvents": to_trace_events(spans, us_per_step)}
+    path.write_text(json.dumps(payload, sort_keys=True) + "\n")
+    return path

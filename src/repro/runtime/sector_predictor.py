@@ -22,6 +22,9 @@ import numpy as np
 EMA_DECAY = 0.85  # history weight (deeper history = the paper's §8.1 note)
 RECENCY_BONUS = 1e3  # the newest pages are always "predicted" (LSQ-lookahead
 #                      analogue: in-flight accesses are visibly useful)
+PROBE_BONUS = 2.0  # probe page outranks any history score (EMA mass <= 1)
+#                    but never the recency page — the paper's periodic SHT
+#                    refresh: one extra page per wave keeps the table honest
 
 
 def init_table(n_layers, batch, kv_heads, n_pages):
@@ -29,7 +32,20 @@ def init_table(n_layers, batch, kv_heads, n_pages):
     return jnp.zeros((n_layers, batch, kv_heads, n_pages), jnp.float32)
 
 
-def predict_topk(table_l, position, page_size: int, k: int):
+def probe_page_for(position, page_size: int):
+    """Deterministic round-robin probe page for a decode position: walks
+    ``0 .. n_valid-1`` as the position advances, so every valid page is
+    revisited about once per ``n_valid`` waves. A pure function of the
+    position — never of slot, scheduler, wave composition, or telemetry —
+    so probing preserves every stream-identity oracle (and is invisible
+    to the observability layer: tracing cannot change which page probes).
+    """
+    n_valid = position // page_size + 1
+    return position % n_valid
+
+
+def predict_topk(table_l, position, page_size: int, k: int,
+                 probe_page=None):
     """Select the top-k sectors for each (batch, kv-head).
 
     table_l: (B, Hkv, P) scores for one layer. The pages at/near `position`
@@ -40,6 +56,13 @@ def predict_topk(table_l, position, page_size: int, k: int):
     the selection covers every valid page (exact mode) the gathered buffer
     is laid out identically to the dense cache prefix — the layout half of
     the bit-exactness contract asserted in tests/test_serve.py.
+
+    ``probe_page`` ((B,) int, optional) marks one valid page per sequence
+    that must win a selection slot regardless of its decayed history score
+    (:data:`PROBE_BONUS` ranks it above any EMA mass but below the recency
+    page). ``top_k`` over distinct page indices guarantees the probe never
+    duplicates an already-selected page — callers widen ``k`` by one so
+    the probe adds coverage instead of evicting the weakest history pick.
     """
     B, H, P = table_l.shape
     pages = jnp.arange(P)
@@ -49,6 +72,9 @@ def predict_topk(table_l, position, page_size: int, k: int):
     # bonus swallow the whole top-k budget — caught by tests/test_serve.py)
     recency = (pages[None, :] >= cur_page[:, None]).astype(jnp.float32)
     scores = table_l + RECENCY_BONUS * recency[:, None, :]
+    if probe_page is not None:
+        probed = (pages[None, :] == probe_page[:, None]).astype(jnp.float32)
+        scores = scores + PROBE_BONUS * probed[:, None, :]
     # mask pages beyond the current fill
     valid = pages[None, :] <= cur_page[:, None]
     scores = jnp.where(valid[:, None, :], scores, -jnp.inf)

@@ -92,16 +92,30 @@ def init_state(cfg, batch, seq_len, dtype=jnp.bfloat16) -> SectoredState:
                          position=jnp.zeros((batch,), jnp.int32))
 
 
-def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int):
+def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int,
+                    probe: bool = False):
     """One-token decode attention over predictor-selected KV sectors.
 
     x: (B,1,D). Returns (out, new_cache, new_table_l).
+
+    ``probe=True`` widens the selection by ONE page chosen round-robin
+    over the valid pages (``sector_predictor.probe_page_for``): the probed
+    page's true attention mass re-enters the SHT update each visit, so the
+    table's scores for narrowly-unfetched pages stay honest instead of
+    decaying toward zero (the paper's periodic SHT refresh). Off by
+    default — exact mode and direct callers keep bit-exact behaviour; the
+    serving backend enables it whenever the budget is genuinely narrow.
     """
     B = x.shape[0]
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
     rep = cfg.n_heads // hkv
     pos = cache.length[:, None]
     q, k_new, v_new = attention.qkv(attn_params, cfg, x, pos)
+    probe_page = None
+    select_k = k_pages
+    if probe:
+        probe_page = sector_predictor.probe_page_for(cache.length, PAGE_SIZE)
+        select_k = k_pages + 1
 
     # one-hot cache append (see attention.decode_attend: scatter would
     # replicate the sharded cache under SPMD)
@@ -117,8 +131,9 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int):
         # head-major transpose copy and no per-head cross-shard exchange.
         shared = jnp.sum(table_l, axis=1, keepdims=True)  # (B, 1, P)
         pages1 = sector_predictor.predict_topk(
-            shared, cache.length, PAGE_SIZE, k_pages)  # (B, 1, K)
-        pages = jnp.broadcast_to(pages1, (B, hkv, k_pages))
+            shared, cache.length, PAGE_SIZE, select_k,
+            probe_page=probe_page)  # (B, 1, K)
+        pages = jnp.broadcast_to(pages1, (B, hkv, select_k))
         kp = k.reshape(B, -1, PAGE_SIZE, hkv, hd)
         vp = v.reshape(B, -1, PAGE_SIZE, hkv, hd)
         k_g = jnp.take_along_axis(
@@ -131,7 +146,8 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int):
     else:
         # 1. sector bits: predictor top-k pages per (B, Hkv)
         pages = sector_predictor.predict_topk(
-            table_l, cache.length, PAGE_SIZE, k_pages)  # (B, Hkv, K)
+            table_l, cache.length, PAGE_SIZE, select_k,
+            probe_page=probe_page)  # (B, Hkv, K)
         # 2. VBL gather: only the selected pages move (K*PAGE tokens, not S)
         kp = k.reshape(B, -1, PAGE_SIZE, hkv, hd)
         vp = v.reshape(B, -1, PAGE_SIZE, hkv, hd)
@@ -175,8 +191,13 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int):
 
 
 def sectored_decode_step(params, cfg, state: SectoredState, token,
-                         k_pages: int):
-    """Full-model one-token decode with sectored attention per layer."""
+                         k_pages: int, probe: bool = False):
+    """Full-model one-token decode with sectored attention per layer.
+
+    ``probe`` forwards to :func:`sectored_attend` — default off, so direct
+    callers (the exact-mode oracle, mesh factories, prefill scans) keep
+    their bit-exact selection; ``SectoredKVBackend`` turns it on for
+    genuinely narrow page budgets."""
     x = layers.embed(params, token)
     if cfg.n_layers == 0:  # dry-run probe base
         hidden = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -186,7 +207,7 @@ def sectored_decode_step(params, cfg, state: SectoredState, token,
         lp, cache, table_l = scans
         h = layers.rms_norm(x, lp["norm1"], cfg.norm_eps)
         att, cache_new, table_new = sectored_attend(
-            lp["attn"], cfg, h, cache, table_l, k_pages)
+            lp["attn"], cfg, h, cache, table_l, k_pages, probe=probe)
         x = x + att
         h = layers.rms_norm(x, lp["norm2"], cfg.norm_eps)
         if cfg.moe:
@@ -296,10 +317,20 @@ class SectoredKVBackend(ServingBackend):
         fn = self._k_cache.get(k_pages)
         if fn is None:
             cfg, params = self.cfg, self.params
+            # genuinely narrow budgets widen by one probe page per wave so
+            # the SHT stays honest on long narrow runs; exact mode
+            # (k == pages) stays probe-free and bit-exact with dense
+            probe = self.probe_pages_for(k_pages) > 0
             fn = jax.jit(lambda state, token: sectored_decode_step(
-                params, cfg, state, token, k_pages))
+                params, cfg, state, token, k_pages, probe=probe))
             self._k_cache[k_pages] = fn
         return fn
+
+    def probe_pages_for(self, k_pages: int) -> int:
+        """Extra probe pages a sectored step at this budget fetches per
+        wave (0 in exact mode) — the number the telemetry meter adds to
+        its per-slot fetch accounting."""
+        return 1 if 0 < k_pages < self.pages else 0
 
     def k_for(self, topk_frac: float | None = None) -> int:
         """Concrete page budget a policy fraction resolves to — the number

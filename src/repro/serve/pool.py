@@ -62,6 +62,11 @@ class KVPagePool:
     def observe(self, held_pages: int) -> None:
         """Record a concurrent-demand sample for peak reporting."""
         self.peak_pages = max(self.peak_pages, held_pages)
+        # flight-recorder passthrough, installed by FlightRecorder.bind();
+        # discovered by getattr like every optional hook, zero-cost absent
+        obs = getattr(self, "obs", None)
+        if obs is not None:
+            obs.on_pool(held_pages)
 
     def fits(self, held_pages: int) -> bool:
         return held_pages <= self.capacity_pages

@@ -57,6 +57,18 @@ import collections
 from typing import Protocol, runtime_checkable
 
 
+def _observe_schedule(scheduler, session) -> None:
+    """Report queue pressure to the session's flight recorder, if any —
+    discovered by getattr like the meter/mesh hooks, zero-cost absent.
+    Called at the top of ``schedule()`` so the gauges describe the state
+    the admission pass actually saw."""
+    obs = getattr(session, "obs", None)
+    if obs is not None:
+        obs.on_schedule(queue_depth=len(session.queue),
+                        ready=scheduler.pending(),
+                        scheduler=getattr(scheduler, "name", "custom"))
+
+
 @runtime_checkable
 class Scheduler(Protocol):
     """Admission + wave-composition policy driven by ``ServeSession``."""
@@ -90,6 +102,7 @@ class FifoScheduler:
 
     def schedule(self, session) -> None:
         session.preempt_overcommitted()
+        _observe_schedule(self, session)
         for slot in session.free_slots():
             if not session.queue:
                 break
@@ -128,6 +141,7 @@ class OverlapScheduler:
 
     def schedule(self, session) -> None:
         session.preempt_overcommitted()
+        _observe_schedule(self, session)
         self._install_ready(session)
         if not session.active_slots() and not self._ready and session.queue:
             # cold start: no wave in flight to overlap with — prefill

@@ -230,6 +230,8 @@ class StreamHandle:
             self._session.step()
             steps += 1
             if steps > limit:
+                if self._session.obs is not None:
+                    self._session.obs.on_truncated(self)
                 raise StreamTruncated(
                     f"request {self.rid} did not complete within {limit} "
                     f"session steps: {len(self._tokens)} of "
@@ -269,6 +271,7 @@ class ServeSession:
                  vectorized: bool = True, fuse_wave: bool = True,
                  page_pool: KVPagePool | None = None,
                  prefix_cache: PrefixCache | None = None,
+                 obs=None,
                  max_stream_steps: int = 10_000):
         self.backend = backend
         self.max_batch = max_batch
@@ -359,6 +362,13 @@ class ServeSession:
         self.wave_in_flight = False  # True between dispatch and blocking
         self._submit_seq = 0  # submission order (preemption requeue key)
         self._admit_seq = 0  # admission order (youngest-first victims)
+        # flight recorder (repro.obs): like the meter, every hook site is
+        # one `is None` check; the recorder's hooks are pure host
+        # bookkeeping, so enabling it cannot perturb streams or joules
+        # (the observer-effect oracle in tests/test_obs.py)
+        self.obs = obs
+        if obs is not None:
+            obs.bind(self)
 
     @staticmethod
     def _zero_stats() -> dict[str, int]:
@@ -392,6 +402,8 @@ class ServeSession:
             handle._tokens = request.generated
             handle._bound = True
         self.queue.append(handle)
+        if self.obs is not None:
+            self.obs.on_submit(handle)
         return handle
 
     def _validate(self, request: Request) -> None:
@@ -730,6 +742,11 @@ class ServeSession:
         self.slots[slot] = handle
         handle._admit_index = self._admit_seq
         self._admit_seq += 1
+        if self.obs is not None:
+            # before the prefill token lands: the recorder distinguishes a
+            # resume (generated tokens survived preemption) from a fresh
+            # admission by the pre-emit token count
+            self.obs.on_admit(slot, handle)
         if self.page_pool is not None:
             self.page_pool.observe(self._held_pages_total())
         handle._tokens.append(first_token)
@@ -765,6 +782,9 @@ class ServeSession:
             self.states[slot] = None
         self.completion_order.append(handle.rid)
         self.stats["completed"] += 1
+        if self.obs is not None:
+            self.obs.on_finish(slot, handle,
+                               reason="eos" if stopped else "quota")
 
     # -- KV page capacity (pool-gated admission + preemption) -------------
 
@@ -945,6 +965,8 @@ class ServeSession:
             self.meter.record_eviction(
                 handle.rid, kv_tokens=handle.prefill_len,
                 kv_pages=self.page_pool.pages_for(handle.prefill_len))
+        if self.obs is not None:
+            self.obs.on_preempt(slot, handle)
         return handle
 
     # -- demand merge (shared-prefix OR-merge, LSQ-Lookahead analogue) ----
@@ -1054,6 +1076,8 @@ class ServeSession:
 
     def step(self) -> int:
         """Admit + one decode wave. Returns tokens produced."""
+        if self.obs is not None:
+            self.obs.advance()  # the virtual step clock every span keys on
         self.scheduler.schedule(self)
         active = self.active_slots()
         if not active:
@@ -1118,9 +1142,17 @@ class ServeSession:
         wall_s = time.perf_counter() - t0 if self.meter is not None else 0.0
         wave_info = (self._meter_wave_info(active, decision, use_sectored)
                      if self.meter is not None else None)
+        # (slot, rid) pairs captured before _emit_wave vacates finished slots
+        active_rids = ([(s, self.slots[s].rid) for s in active]
+                       if self.obs is not None else None)
         produced = self._emit_wave(active, next_tok, logps, use_sectored)
         if wave_info is not None:
             self.meter.record_wave(wall_s=wall_s, **wave_info)
+        if self.obs is not None:
+            energy = (self.meter.recorder.window(1)[-1]
+                      if self.meter is not None else None)
+            self.obs.on_wave(active_rids=active_rids, produced=produced,
+                             sectored=use_sectored, energy=energy)
         return produced
 
     def _meter_wave_info(self, active: list[int], decision,
@@ -1137,6 +1169,13 @@ class ServeSession:
         k_for = getattr(self.backend, "k_for", None)
         k_pages = (k_for(decision.topk_frac)
                    if use_sectored and k_for is not None else None)
+        if k_pages is not None:
+            # narrow budgets fetch one extra probe page per wave (the SHT
+            # refresh); charge it — record_wave caps per-slot fetches at
+            # the slot's valid pages, so full-coverage slots never overpay
+            probe_for = getattr(self.backend, "probe_pages_for", None)
+            if probe_for is not None:
+                k_pages += probe_for(k_pages)
         slots = [(s, self.slots[s].rid,
                   len(self.slots[s].request.prompt)
                   + len(self.slots[s]._tokens) - 1)
@@ -1258,6 +1297,8 @@ class ServeSession:
             self.step()
             steps += 1
             if steps > limit:
+                if self.obs is not None:
+                    self.obs.on_truncated()
                 raise StreamTruncated(
                     f"engine did not drain within {limit} steps "
                     f"(queued={len(self.queue)}, "
@@ -1274,6 +1315,7 @@ def make_session(backend_or_fns, *, max_batch: int = 8,
                  fuse_wave: bool = True,
                  page_pool: KVPagePool | None = None,
                  prefix_cache: PrefixCache | None = None,
+                 obs=None,
                  max_stream_steps: int = 10_000) -> ServeSession:
     """Convenience constructor accepting a backend or the legacy 4-tuple."""
     if isinstance(backend_or_fns, (tuple, list)):
@@ -1282,4 +1324,4 @@ def make_session(backend_or_fns, *, max_batch: int = 8,
                         scheduler=scheduler, policy=policy,
                         vectorized=vectorized, fuse_wave=fuse_wave,
                         page_pool=page_pool, prefix_cache=prefix_cache,
-                        max_stream_steps=max_stream_steps)
+                        obs=obs, max_stream_steps=max_stream_steps)

@@ -11,6 +11,13 @@ O(1) memory. Two consumers:
   own sector-history decay.
 * **Reporting** — ``benchmarks/serve_energy.py`` and ``launch/serve.py
   --telemetry`` export the raw window as JSONL for offline analysis.
+
+The ``attn_mass`` field arrives honest from the runtime: narrow sectored
+steps widen their fetch by one deterministic probe page per wave
+(``runtime.sector_predictor.probe_page_for``), so the sector-history table
+keeps fresh scores for the whole valid range and no analytic de-biasing is
+needed here. ``attn_mass_raw`` is retained as an alias of the observed
+value so downstream JSONL consumers keep their column.
 """
 
 from __future__ import annotations
@@ -24,15 +31,6 @@ from typing import Any, Iterable, Mapping
 EMA_FIELDS = ("sector_coverage", "attn_mass", "attn_mass_raw", "energy_j",
               "k_pages")
 DEFAULT_EMA_ALPHA = 0.25
-#: per-wave decay the sector predictor applies to UNFETCHED pages — must
-#: mirror ``runtime.sector_predictor.EMA_DECAY`` (asserted equal in
-#: tests/test_telemetry.py; kept as a literal so this leaf module never
-#: imports the jax-heavy runtime)
-PROBE_DECAY = 0.85
-#: narrow-run horizon for the probe correction: past this many consecutive
-#: narrow waves the unfetched scores are so deflated (0.85^32 ~ 4e-3) that
-#: inverting further just amplifies float noise
-PROBE_RUN_CAP = 32
 
 
 class TraceRecorder:
@@ -45,44 +43,28 @@ class TraceRecorder:
     leave their EMA untouched, so a burst of dense waves does not erase the
     sectored-path coverage signal.
 
-    **Probe-page correction.** The predictor's ``attn_mass`` estimate
-    drifts high on long narrow runs: ``sector_predictor.update`` decays
-    *every* page's score by :data:`PROBE_DECAY` each wave but refreshes
-    only the fetched ones, so after ``n`` consecutive narrow
-    (coverage < 1) waves the unfetched scores are deflated by
-    ``PROBE_DECAY**n`` and the captured *share* inflates toward 1.0 —
-    exactly the runs where an adaptive policy most needs an honest
-    signal. The recorder inverts that known bias before folding the EMA:
-    with raw share ``c``, the corrected share is
-    ``c / (c + (1 - c) * PROBE_DECAY**(-min(n, PROBE_RUN_CAP)))``
-    (fetched mass is refreshed and trusted; unfetched mass is re-inflated
-    by the decay it silently accrued). ``n`` resets on any full-coverage
-    wave — a dense wave or a full sectored fetch re-anchors the whole
-    table, like the paper's periodic SHT probe refresh. The uncorrected
-    value is preserved per record (and EMA'd) as ``attn_mass_raw``.
+    Storage is an explicit ring: a preallocated slab of ``capacity`` slots
+    written at ``seq % capacity``. Once wrapped, the oldest surviving
+    record lives at the *write* cursor, not at slot 0 — ``window()`` and
+    ``to_jsonl()`` rotate so exports always run in arrival (``seq``) order
+    regardless of where the cursor sits (tested explicitly in
+    tests/test_telemetry.py).
     """
 
     def __init__(self, capacity: int = 1024,
-                 ema_alpha: float = DEFAULT_EMA_ALPHA,
-                 probe_decay: float = PROBE_DECAY):
+                 ema_alpha: float = DEFAULT_EMA_ALPHA):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if not 0.0 < ema_alpha <= 1.0:
             raise ValueError(f"ema_alpha must be in (0, 1], got {ema_alpha}")
-        if not 0.0 < probe_decay <= 1.0:
-            raise ValueError(
-                f"probe_decay must be in (0, 1], got {probe_decay}")
         self.capacity = capacity
         self.ema_alpha = ema_alpha
-        self.probe_decay = probe_decay
-        self._narrow_run = 0  # consecutive narrow waves since full coverage
-        self._buf: collections.deque[dict[str, Any]] = collections.deque(
-            maxlen=capacity)
+        self._buf: list[dict[str, Any] | None] = [None] * capacity
         self._appended = 0
         self.ema: dict[str, float] = {}
 
     def __len__(self) -> int:
-        return len(self._buf)
+        return min(self._appended, self.capacity)
 
     @property
     def total_appended(self) -> int:
@@ -92,8 +74,9 @@ class TraceRecorder:
     def append(self, record: Mapping[str, Any]) -> None:
         rec = dict(record)
         rec.setdefault("seq", self._appended)
-        self._apply_probe_correction(rec)
-        self._buf.append(rec)
+        if rec.get("attn_mass") is not None:
+            rec.setdefault("attn_mass_raw", float(rec["attn_mass"]))
+        self._buf[self._appended % self.capacity] = rec
         self._appended += 1
         for field in EMA_FIELDS:
             value = rec.get(field)
@@ -105,30 +88,21 @@ class TraceRecorder:
                                (1.0 - self.ema_alpha) * prev
                                + self.ema_alpha * value)
 
-    def _apply_probe_correction(self, rec: dict[str, Any]) -> None:
-        """De-bias ``attn_mass`` in place (see class docstring); tracks
-        the narrow-run length from the record's own coverage field."""
-        coverage = rec.get("sector_coverage")
-        if coverage is not None:
-            if float(coverage) >= 1.0 - 1e-9:
-                self._narrow_run = 0  # full fetch re-anchors the table
-            else:
-                self._narrow_run += 1
-        raw = rec.get("attn_mass")
-        if raw is None:
-            return
-        raw = float(raw)
-        rec["attn_mass_raw"] = raw
-        n = min(self._narrow_run, PROBE_RUN_CAP)
-        if n > 0 and 0.0 < raw < 1.0:
-            rec["attn_mass"] = raw / (
-                raw + (1.0 - raw) * self.probe_decay ** (-n))
+    def _ordered(self) -> list[dict[str, Any]]:
+        """Buffered records in arrival order (oldest surviving first)."""
+        if self._appended <= self.capacity:
+            return [r for r in self._buf[:self._appended] if r is not None]
+        cursor = self._appended % self.capacity
+        return [r for r in self._buf[cursor:] + self._buf[:cursor]
+                if r is not None]
 
     def window(self, n: int | None = None) -> list[dict[str, Any]]:
-        """The last ``n`` records (all buffered records when ``n`` is None)."""
-        if n is None or n >= len(self._buf):
-            return list(self._buf)
-        return list(self._buf)[len(self._buf) - n:]
+        """The last ``n`` records (all buffered records when ``n`` is None),
+        in arrival order."""
+        records = self._ordered()
+        if n is None or n >= len(records):
+            return records
+        return records[len(records) - n:]
 
     def mean(self, field: str, n: int | None = None) -> float | None:
         """Window mean of a numeric field (records missing it are skipped)."""
@@ -139,7 +113,8 @@ class TraceRecorder:
         return sum(values) / len(values)
 
     def to_jsonl(self, path, extra: Mapping[str, Any] | None = None):
-        """Write the buffered window as JSON Lines; returns the path.
+        """Write the buffered window as JSON Lines in arrival order;
+        returns the path.
 
         ``extra`` fields are merged into every line (run metadata such as
         arch / scheduler / policy), keeping each line self-describing for
@@ -148,7 +123,7 @@ class TraceRecorder:
         path = pathlib.Path(path)
         base = dict(extra or {})
         with path.open("w") as fh:
-            for rec in self._buf:
+            for rec in self._ordered():
                 fh.write(json.dumps({**base, **rec}) + "\n")
         return path
 

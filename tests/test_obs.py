@@ -1,0 +1,446 @@
+"""Flight-recorder contracts: request span trees on the virtual step
+clock, the metrics registry's deterministic snapshot API, byte-identical
+trace exporters, the observer-effect oracle at unit scale, and the
+bench-trend gate.
+
+The toy backend is the same resume-consistent sum machine the capacity
+tests use, so preemption/resume span trees can be exercised against
+streams whose correctness is independently checkable on the host.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import trend
+from repro.obs import (SESSION_TRACK, TRACE_SCHEMA_VERSION, US_PER_STEP,
+                       FlightRecorder, MetricsRegistry, to_trace_events,
+                       write_jsonl, write_perfetto)
+from repro.obs.metrics import Counter, Gauge, Histogram
+from repro.serve import (FifoScheduler, KVPagePool, OverlapScheduler,
+                         Request, ServeSession, ServingBackend,
+                         StreamTruncated)
+
+VOCAB = 32
+
+
+def _sum_backend():
+    """Resume-consistent toy backend (see tests/test_serve_capacity.py):
+    state carries the running token sum, prefill recomputes it from
+    scratch, so preempt/resume is stream-invisible."""
+
+    def prefill_fn(tokens):
+        B, S = tokens.shape
+        s = jnp.sum(tokens, axis=1).astype(jnp.int32)
+        return (jax.nn.one_hot(s % VOCAB, VOCAB),
+                dict(s=s, kv=jnp.zeros((B, 8), jnp.float32)))
+
+    def decode_fn(state, token):
+        s = state["s"] + token[:, 0]
+        return jax.nn.one_hot(s % VOCAB, VOCAB), dict(s=s, kv=state["kv"])
+
+    return ServingBackend(prefill_fn, decode_fn, vocab=VOCAB)
+
+
+def _expected_stream(prompt, n, stop=()):
+    s = int(np.sum(prompt))
+    out = []
+    for _ in range(n):
+        tok = s % VOCAB
+        out.append(tok)
+        if tok in stop:
+            break
+        s += tok
+    return out
+
+
+def _spans_by(obs, track, name=None):
+    return [s for s in obs.spans()
+            if s["track"] == track and (name is None or s["name"] == name)]
+
+
+# -- metrics registry --------------------------------------------------------
+
+
+def test_counter_monotonic_and_rejects_negative():
+    c = Counter("tokens")
+    c.inc()
+    c.inc(4)
+    assert c.snapshot() == 5
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+    assert c.snapshot() == 5
+
+
+def test_gauge_tracks_extrema_from_first_sample():
+    g = Gauge("depth")
+    g.set(3)
+    g.set(7)
+    g.set(1)
+    assert g.snapshot() == {"value": 1, "min": 1, "max": 7}
+    # min must seed from the first sample, not from a 0.0 default
+    g2 = Gauge("depth")
+    g2.set(5)
+    assert g2.snapshot()["min"] == 5
+
+
+def test_histogram_buckets_count_and_sidecars():
+    h = Histogram("steps", buckets=(1, 4, 16))
+    for v in (0.5, 1, 3, 20, 100):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 5
+    # upper-bound inclusive: 1 lands in the "1" bucket, 20/100 in +inf
+    assert snap["buckets"] == {"1": 2, "4": 1, "+inf": 2}
+    assert snap["min"] == 0.5 and snap["max"] == 100
+    assert snap["mean"] == pytest.approx(124.5 / 5)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Histogram("bad", buckets=(4, 4, 1))
+
+
+def test_registry_type_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("waves").inc()
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("waves")
+    assert reg.counter("waves").snapshot() == 1  # original unharmed
+
+
+def test_registry_snapshot_deterministic_and_sorted():
+    def feed(reg):
+        reg.gauge("z_depth").set(2)
+        reg.counter("a_waves").inc(3)
+        reg.histogram("m_wait").observe(5)
+
+    r1, r2 = MetricsRegistry(), MetricsRegistry()
+    feed(r1)
+    feed(r2)
+    s1, s2 = r1.snapshot(), r2.snapshot()
+    assert json.dumps(s1, sort_keys=True) == json.dumps(s2, sort_keys=True)
+    assert list(s1) == sorted(s1)
+    rendered = MetricsRegistry.render(s1)
+    for name in ("a_waves", "m_wait", "z_depth"):
+        assert name in rendered
+
+
+# -- span trees on the virtual step clock ------------------------------------
+
+
+def test_uncontended_request_span_tree():
+    obs = FlightRecorder()
+    sess = ServeSession(_sum_backend(), max_batch=2, obs=obs)
+    prompt = np.asarray([1, 2], np.int32)
+    h = sess.submit(Request(0, prompt, max_new_tokens=5))
+    sess.run_until_drained()
+    assert h.peek() == _expected_stream(prompt, 5)
+
+    (root,) = _spans_by(obs, 0, "request")
+    assert root["end"] is not None and root["start"] <= root["end"]
+    assert root["attrs"]["reason"] == "quota"
+    assert root["attrs"]["tokens"] == 5
+    assert root["attrs"]["prompt_tokens"] == 2
+    (queued,) = _spans_by(obs, 0, "queued")
+    (running,) = _spans_by(obs, 0, "running")
+    (prefill,) = _spans_by(obs, 0, "prefill")
+    assert queued["end"] == running["start"] == prefill["start"]
+    assert prefill["attrs"]["mode"] == "cold"
+    assert running["end"] == root["end"]
+
+    waves = _spans_by(obs, SESSION_TRACK, "wave")
+    assert len(waves) == sess.stats["waves"]
+    for w in waves:
+        assert w["end"] == w["start"] + 1  # each wave owns one step
+        assert 0 < w["attrs"]["occupancy"] <= 1
+    seqs = [s["seq"] for s in obs.spans()]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+    snap = obs.snapshot()
+    assert snap["requests_submitted"] == snap["requests_completed"] == 1
+    assert snap["tokens_emitted"] == sess.stats["decode_steps"]
+
+
+@pytest.mark.parametrize("scheduler", [FifoScheduler, OverlapScheduler],
+                         ids=["fifo", "overlap"])
+def test_preempt_resume_eos_joint_lifecycle(scheduler):
+    """One run exercising the full lifecycle jointly: pool growth
+    preempts the younger request, the survivor EOS-stops, the victim
+    resumes and runs to quota — session stats, flight-recorder metrics,
+    and the span tree must all agree on that story."""
+    obs = FlightRecorder()
+    sess = ServeSession(_sum_backend(), max_batch=4, scheduler=scheduler(),
+                        page_pool=KVPagePool(4, page_size=4), obs=obs)
+    # streams: rid 0 -> 11,22,12,24,16,0 (stops on 0); rid 1 -> 12,24,...
+    p0 = np.asarray([1, 2, 3, 5], np.int32)
+    p1 = np.asarray([2, 2, 3, 5], np.int32)
+    h0 = sess.submit(Request(0, p0, max_new_tokens=8, stop_tokens=(0,)))
+    h1 = sess.submit(Request(1, p1, max_new_tokens=8))
+    sess.run_until_drained()
+
+    # the streams themselves: preemption invisible, EOS stops rid 0
+    assert h0.peek() == _expected_stream(p0, 8, stop=(0,)) and h0.stopped
+    assert h1.peek() == _expected_stream(p1, 8)
+    assert sess.stats["preemptions"] > 0 and h1.preemptions > 0
+    assert h0.preemptions == 0
+    assert sess.stats["eos_stops"] == 1
+    assert sess.stats["completed"] == 2
+
+    # metrics mirror the stats counters exactly
+    snap = obs.snapshot()
+    assert snap["preemptions"] == sess.stats["preemptions"]
+    assert snap["eos_stops"] == 1
+    assert snap["requests_completed"] == 2
+    assert snap["prefill_cold"] == 2
+    assert snap["prefill_resume"] == h0.preemptions + h1.preemptions
+    assert snap["tokens_emitted"] == sess.stats["decode_steps"]
+
+    # span tree: the victim has two queued + two running epochs bracketing
+    # a preempt instant; everything is closed at drain
+    assert len(_spans_by(obs, 1, "queued")) == 1 + h1.preemptions
+    runnings = _spans_by(obs, 1, "running")
+    assert len(runnings) == 1 + h1.preemptions
+    assert runnings[0]["attrs"]["preempted"] is True
+    (preempt,) = _spans_by(obs, 1, "preempt")[:1]
+    assert preempt["attrs"]["tokens_kept"] > 0
+    prefills = _spans_by(obs, 1, "prefill")
+    assert [p["attrs"]["mode"] for p in prefills] == \
+        ["cold"] + ["resume"] * h1.preemptions
+    (root0,) = _spans_by(obs, 0, "request")
+    (root1,) = _spans_by(obs, 1, "request")
+    assert root0["attrs"]["reason"] == "eos"
+    assert root1["attrs"]["reason"] == "quota"
+    assert root1["attrs"]["preemptions"] == h1.preemptions
+    assert not obs._open  # nothing left dangling after a full drain
+
+    # pool pressure reached the gauges through KVPagePool.observe
+    assert snap["pool_pages_held"]["max"] == sess.page_pool.peak_pages
+
+
+def test_truncated_stream_leaves_spans_open_and_counts():
+    """StreamTruncated aborts the wait, not the request: the span stays
+    open (the stream genuinely did not finish), the cut is an instant on
+    the request's track, and the counter increments."""
+    obs = FlightRecorder()
+    sess = ServeSession(_sum_backend(), max_batch=1, max_stream_steps=3,
+                        obs=obs)
+    sess.submit(Request(0, np.arange(3, dtype=np.int32), max_new_tokens=8))
+    h1 = sess.submit(Request(1, np.arange(3, dtype=np.int32),
+                             max_new_tokens=8))
+    with pytest.raises(StreamTruncated):
+        list(h1.tokens())
+    assert obs.snapshot()["truncated_streams"] == 1
+    (cut,) = _spans_by(obs, 1, "truncated")
+    assert cut["end"] == cut["start"]  # instant
+    (root,) = _spans_by(obs, 1, "request")
+    assert root["end"] is None  # still open: rid 1 never ran
+    # the stream is still drainable afterwards; finishing closes the tree
+    assert len(list(h1.tokens(max_steps=100))) > 0
+    (root,) = _spans_by(obs, 1, "request")
+    assert root["end"] is not None and root["attrs"]["reason"] == "quota"
+
+
+def test_drain_truncation_lands_on_session_track():
+    obs = FlightRecorder()
+    sess = ServeSession(_sum_backend(), max_batch=1, obs=obs)
+    for rid in range(4):
+        sess.submit(Request(rid, np.arange(3, dtype=np.int32),
+                            max_new_tokens=8))
+    with pytest.raises(StreamTruncated):
+        sess.run_until_drained(max_steps=2)
+    assert obs.snapshot()["truncated_streams"] == 1
+    assert len(_spans_by(obs, SESSION_TRACK, "truncated")) == 1
+
+
+# -- exporters ---------------------------------------------------------------
+
+
+def _traced_run():
+    obs = FlightRecorder()
+    sess = ServeSession(_sum_backend(), max_batch=2, scheduler=FifoScheduler(),
+                        page_pool=KVPagePool(4, page_size=4), obs=obs)
+    handles = [sess.submit(Request(rid, np.asarray([rid + 1, 2, 3, 5],
+                                                   np.int32),
+                                   max_new_tokens=8)) for rid in range(3)]
+    sess.run_until_drained()
+    return obs, sess, handles
+
+
+def test_exports_are_byte_identical_across_reruns(tmp_path):
+    obs1, _, _ = _traced_run()
+    obs2, _, _ = _traced_run()
+    extra = {"trace_schema_version": TRACE_SCHEMA_VERSION, "leg": "unit"}
+    a = write_jsonl(obs1.spans(), tmp_path / "a.jsonl", extra=extra)
+    b = write_jsonl(obs2.spans(), tmp_path / "b.jsonl", extra=extra)
+    assert a.read_bytes() == b.read_bytes()
+    pa = write_perfetto(obs1.spans(), tmp_path / "a.json", extra=extra)
+    pb = write_perfetto(obs2.spans(), tmp_path / "b.json", extra=extra)
+    assert pa.read_bytes() == pb.read_bytes()
+    # every JSONL line parses and carries the provenance stamp
+    lines = a.read_text().splitlines()
+    assert len(lines) == len(obs1.spans())
+    for line in lines:
+        rec = json.loads(line)
+        assert rec["trace_schema_version"] == TRACE_SCHEMA_VERSION
+        assert rec["leg"] == "unit"
+
+
+def test_perfetto_event_model():
+    obs, sess, _ = _traced_run()
+    events = to_trace_events(obs.spans())
+    phases = {e["ph"] for e in events}
+    assert phases == {"M", "X", "i", "C"}
+    # one thread_name metadata row per track, request tracks first
+    meta = [e for e in events if e["ph"] == "M"]
+    names = [e["args"]["name"] for e in meta]
+    assert names == ["request 0", "request 1", "request 2", SESSION_TRACK]
+    # wave spans are complete events one step long on the session track
+    session_tid = names.index(SESSION_TRACK)
+    waves = [e for e in events
+             if e["ph"] == "X" and e["name"] == "wave"]
+    assert len(waves) == sess.stats["waves"]
+    for w in waves:
+        assert w["tid"] == session_tid
+        assert w["dur"] == US_PER_STEP
+        assert w["ts"] % US_PER_STEP == 0
+    # wave counter series exist (occupancy always; pool pages when pooled)
+    counters = {e["name"] for e in events if e["ph"] == "C"}
+    assert "occupancy" in counters and "pool_pages_held" in counters
+    # prefill instants carry their mode
+    prefills = [e for e in events if e["ph"] == "i" and e["name"] == "prefill"]
+    assert prefills and all("mode" in e["args"] for e in prefills)
+
+
+def test_open_spans_export_as_instants():
+    obs = FlightRecorder()
+    sess = ServeSession(_sum_backend(), max_batch=1, obs=obs)
+    sess.submit(Request(0, np.arange(3, dtype=np.int32), max_new_tokens=8))
+    sess.step()  # request admitted and running, never finished
+    events = to_trace_events(obs.spans())
+    running = [e for e in events if e["name"] == "running"]
+    assert running and all(e["ph"] == "i" and e["args"]["open"]
+                           for e in running)
+
+
+# -- observer-effect oracle (unit scale) -------------------------------------
+
+
+def _lifecycle_run(obs):
+    sess = ServeSession(_sum_backend(), max_batch=4,
+                        scheduler=FifoScheduler(),
+                        page_pool=KVPagePool(4, page_size=4), obs=obs)
+    p0 = np.asarray([1, 2, 3, 5], np.int32)
+    p1 = np.asarray([2, 2, 3, 5], np.int32)
+    handles = [sess.submit(Request(0, p0, max_new_tokens=8,
+                                   stop_tokens=(0,))),
+               sess.submit(Request(1, p1, max_new_tokens=8))]
+    sess.run_until_drained()
+    return sess, handles
+
+
+def test_tracing_has_no_observer_effect():
+    """The headline contract at unit scale: a preempting, EOS-stopping
+    run produces bit-identical streams, logprobs, and stats with the
+    flight recorder attached or absent — and two traced runs produce
+    identical span trees."""
+    base_sess, base = _lifecycle_run(obs=None)
+    obs1 = FlightRecorder()
+    sess1, traced = _lifecycle_run(obs=obs1)
+    for h_off, h_on in zip(base, traced):
+        assert h_off.peek() == h_on.peek()
+        assert h_off.logprobs() == h_on.logprobs()
+    assert base_sess.stats == sess1.stats
+    assert sess1.stats["preemptions"] > 0  # the run was genuinely contended
+
+    obs2 = FlightRecorder()
+    _lifecycle_run(obs=obs2)
+    assert (json.dumps(obs1.spans(), sort_keys=True)
+            == json.dumps(obs2.spans(), sort_keys=True))
+    assert (json.dumps(obs1.snapshot(), sort_keys=True)
+            == json.dumps(obs2.snapshot(), sort_keys=True))
+
+
+# -- bench-trend gate --------------------------------------------------------
+
+
+def _serve_payload(fifo=100.0, overlap=120.0, sampled=95.0):
+    return {"tokens_per_sec": {"fifo": fifo, "overlap": overlap,
+                               "sampled": sampled},
+            "schema_version": 3, "git_commit": "test"}
+
+
+def _write(dirpath, name, payload):
+    dirpath.mkdir(parents=True, exist_ok=True)
+    (dirpath / name).write_text(json.dumps(payload))
+
+
+def test_trend_fails_on_ten_percent_throughput_regression(tmp_path, capsys):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, "BENCH_serve.json", _serve_payload())
+    _write(fresh, "BENCH_serve.json", _serve_payload(fifo=90.0))
+    rc = trend.main(["--baseline-dir", str(base), "--fresh-dir", str(fresh),
+                     "--files", "BENCH_serve.json"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "tokens_per_sec.fifo" in out
+
+
+def test_trend_passes_on_identical_rerun_and_flags_improvement(tmp_path,
+                                                               capsys):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, "BENCH_serve.json", _serve_payload())
+    _write(fresh, "BENCH_serve.json", _serve_payload(overlap=150.0))
+    rc = trend.main(["--baseline-dir", str(base), "--fresh-dir", str(fresh),
+                     "--files", "BENCH_serve.json"])
+    assert rc == 0  # improvements never fail the gate
+    assert "+++" in capsys.readouterr().out
+
+
+def test_trend_deterministic_band_is_tight(tmp_path):
+    """Counter-derived metrics get the near-zero band: a 0.1% drift in
+    metered joules is a behaviour change, not noise."""
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    payload = {"patterns": {"poisson": {"steps": 100, "j_per_token": 1e-6,
+                                        "ttft_steps": {"p99": 12}}},
+               "schema_version": 3}
+    _write(base, "BENCH_traffic.json", payload)
+    drift = json.loads(json.dumps(payload))
+    drift["patterns"]["poisson"]["j_per_token"] = 1.001e-6
+    _write(fresh, "BENCH_traffic.json", drift)
+    rc = trend.main(["--baseline-dir", str(base), "--fresh-dir", str(fresh),
+                     "--files", "BENCH_traffic.json"])
+    assert rc == 1
+
+
+def test_trend_schema_mismatch_skips_not_fails(tmp_path, capsys):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, "BENCH_serve.json", _serve_payload())
+    bumped = _serve_payload(fifo=50.0)
+    bumped["schema_version"] = 99
+    _write(fresh, "BENCH_serve.json", bumped)
+    rc = trend.main(["--baseline-dir", str(base), "--fresh-dir", str(fresh),
+                     "--files", "BENCH_serve.json"])
+    assert rc == 0
+    assert "re-baseline" in capsys.readouterr().out
+
+
+def test_trend_missing_files_skip_and_update_baselines_seeds(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(fresh, "BENCH_serve.json", _serve_payload())
+    # no baseline yet: skipped, not failed
+    assert trend.main(["--baseline-dir", str(base),
+                       "--fresh-dir", str(fresh)]) == 0
+    # seed the baselines, then the rerun compares clean
+    assert trend.main(["--baseline-dir", str(base), "--fresh-dir",
+                       str(fresh), "--update-baselines"]) == 0
+    assert (base / "BENCH_serve.json").exists()
+    assert trend.main(["--baseline-dir", str(base), "--fresh-dir",
+                       str(fresh), "--files", "BENCH_serve.json"]) == 0
+
+
+def test_trend_unknown_file_refused():
+    with pytest.raises(SystemExit, match="no trend spec"):
+        trend.compare_all(trend.DEFAULT_BASELINE_DIR,
+                          trend.DEFAULT_BASELINE_DIR,
+                          ["BENCH_bogus.json"])
