@@ -12,10 +12,17 @@ ONE shared SectoredKVBackend, each metered by a ``MeteredBackend``:
 * ``adaptive`` — ``AdaptiveSectorPolicy``: starts narrow, widens only when
   the recorder's coverage signal demands it, capped at the static width —
   the telemetry loop discovers how little the observed workload needs.
+* ``quantized`` — the static width served by the ``fused_q8`` kernel:
+  per-sector int8 KV read through the fused Pallas path, so every
+  sectored fetch moves half the bytes per word (the paper's
+  narrower-burst VBL analog). Quality-gated: the teacher-forced logprob
+  max-abs-err vs the f32 dispatch path must stay within
+  ``Q8_LOGPROB_TOL`` (the documented tolerance, docs/serving.md).
 
 Expected ordering (asserted; the CI gate rides on the adaptive-vs-dense
-leg): adaptive J/token <= static J/token <= dense J/token. Results land in
-``BENCH_energy.json`` (git-stamped via ``benchmarks.common``).
+leg): adaptive J/token <= static J/token <= dense J/token, and quantized
+J/token < static J/token (same fetch width, narrower words). Results land
+in ``BENCH_energy.json`` (git-stamped via ``benchmarks.common``).
 
 A second, prefix-sharing scenario reruns the same backend with the
 cross-request ``PrefixCache`` at three sharing levels (0, 256, 519 of a
@@ -51,12 +58,17 @@ except ImportError:  # run as `python benchmarks/serve_energy.py`
 
 SEQ_LEN = 768  # 6 pages at PAGE_SIZE=128: room for the widths to differ
 STATIC_FRAC = 0.7  # static provision: 4 of 6 pages ("safe" hand-tuned width)
+# int8 KV quality bound — the single documented tolerance (docs/serving.md)
+Q8_LOGPROB_TOL = sectored_decode.quantized_kv.LOGPROB_TOL
 
 
 def _make_policy(name, recorder):
     if name == "dense":
         return AlwaysDense()
-    if name == "static":
+    if name in ("static", "quantized"):
+        # the quantized leg serves the SAME fetch width as static — only
+        # the bytes per fetched word differ, so the J/token gap isolates
+        # the narrow-read saving
         return AlwaysSectored(topk_frac=STATIC_FRAC)
     # adaptive: start narrow, widen on demand, never past the static
     # provision — the cap encodes "adaptive replaces the static width",
@@ -93,6 +105,37 @@ def run_config(name, inner, cfg, *, scheduler, max_batch, n_requests,
     report["decode_j_per_token"] = metrics.dram_energy_per_token(
         report["decode_j"], report["tokens"])
     return report
+
+
+def measure_q8_logprob_err(inner, q8, cfg, *, prompt_len, k_pages,
+                           steps=8, batch=2, seed=7):
+    """Teacher-forced quality probe for the quantized point.
+
+    Both backends prefill the same prompts (prefill is dispatch/exact in
+    both, so the states are bit-identical), then step their sectored
+    paths on the SAME token stream — the f32 leg's greedy choice — and
+    the max abs difference of the per-step log-softmax is the quality
+    number the trend gate rides on.
+    """
+    import jax.numpy as jnp
+    from repro.runtime.sectored_decode import sectored_decode_step
+
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+    logits, state_d = inner.prefill_fn(tokens)
+    _, state_q = q8.prefill_fn(tokens)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    worst = 0.0
+    for _ in range(steps):
+        ld, state_d = sectored_decode_step(inner.params, cfg, state_d, tok,
+                                           k_pages, kernel="dispatch")
+        lq, state_q = sectored_decode_step(q8.params, cfg, state_q, tok,
+                                           k_pages, kernel="fused_q8")
+        err = jnp.max(jnp.abs(jax.nn.log_softmax(ld)
+                              - jax.nn.log_softmax(lq)))
+        worst = max(worst, float(err))
+        tok = jnp.argmax(ld, -1)[:, None].astype(jnp.int32)
+    return worst
 
 
 def run_prefix_scenario(inner, cfg, *, prompt_len, max_new_tokens,
@@ -173,10 +216,18 @@ def main(argv=None):
     inner = sectored_decode.make_serving_fns(cfg, params=params,
                                              seq_len=SEQ_LEN, min_topk=1)
 
+    # the quantized leg needs its own backend: the kernel flavor is a
+    # construction choice (the q8 geometry carries the int8 word fraction
+    # the meter charges sectored reads at)
+    q8 = sectored_decode.make_serving_fns(cfg, params=params,
+                                          seq_len=SEQ_LEN, min_topk=1,
+                                          kernel="fused_q8")
+    backends = dict(dense=inner, static=inner, adaptive=inner, quantized=q8)
+
     reports = {}
-    for name in ("dense", "static", "adaptive"):
+    for name in ("dense", "static", "adaptive", "quantized"):
         reports[name] = run_config(
-            name, inner, cfg, scheduler=args.scheduler,
+            name, backends[name], cfg, scheduler=args.scheduler,
             max_batch=args.max_batch, n_requests=n_requests,
             prompt_len=prompt_len, max_new_tokens=max_new_tokens)
         r = reports[name]
@@ -186,12 +237,18 @@ def main(argv=None):
               f"pages={r['pages_fetched']:.1f}/{r['pages_valid']:.1f} "
               f"acts={r['acts']}")
 
+    q8_err = measure_q8_logprob_err(inner, q8, cfg, prompt_len=prompt_len,
+                                    k_pages=q8.k_for(STATIC_FRAC))
+    print(f"quantized logprob max-abs-err vs f32: {q8_err:.5f} "
+          f"(tol {Q8_LOGPROB_TOL})")
+
     prefix_rows = run_prefix_scenario(inner, cfg, prompt_len=prompt_len,
                                       max_new_tokens=max_new_tokens)
 
     dense_jpt = reports["dense"]["j_per_token"]
     static_jpt = reports["static"]["j_per_token"]
     adaptive_jpt = reports["adaptive"]["j_per_token"]
+    quantized_jpt = reports["quantized"]["j_per_token"]
     cold_jpt = prefix_rows[0]["j_per_token"]
     result = dict(
         arch=cfg.name, scheduler=args.scheduler, smoke=args.smoke,
@@ -205,7 +262,14 @@ def main(argv=None):
         tokens={k: reports[k]["tokens"] for k in reports},
         sector_coverage={k: reports[k]["sector_coverage"] for k in reports},
         savings_vs_dense={k: round(1.0 - reports[k]["j_per_token"] / dense_jpt, 4)
-                          for k in ("static", "adaptive")},
+                          for k in ("static", "adaptive", "quantized")},
+        quantized=dict(
+            j_per_token=quantized_jpt,
+            logprob_max_abs_err=q8_err,
+            logprob_tol=Q8_LOGPROB_TOL,
+            kv_word_fraction=q8.kv_geometry().kv_word_fraction,
+            saving_vs_static=round(1.0 - quantized_jpt / static_jpt, 4),
+        ),
         prefix=dict(
             levels=prefix_rows,
             reduction_vs_cold=[round(1.0 - r["j_per_token"] / cold_jpt, 4)
@@ -224,6 +288,18 @@ def main(argv=None):
     if static_jpt > dense_jpt:
         raise SystemExit("FAIL: static-sectored J/token exceeds dense")
     print("OK: adaptive <= static-sectored <= dense J/token")
+    if quantized_jpt >= static_jpt:
+        raise SystemExit(
+            f"FAIL: quantized J/token ({quantized_jpt * 1e6:.3f} uJ) not "
+            f"strictly below static-sectored ({static_jpt * 1e6:.3f} uJ) "
+            f"at the same fetch width")
+    if q8_err > Q8_LOGPROB_TOL:
+        raise SystemExit(
+            f"FAIL: quantized logprob max-abs-err {q8_err:.5f} exceeds "
+            f"the documented tolerance {Q8_LOGPROB_TOL}")
+    print(f"OK: quantized < static J/token "
+          f"({result['quantized']['saving_vs_static']:.1%} saved) at "
+          f"logprob err {q8_err:.5f} <= {Q8_LOGPROB_TOL}")
 
     jpts = [r["j_per_token"] for r in prefix_rows]
     steps = [r["prefilled_tokens"] for r in prefix_rows]

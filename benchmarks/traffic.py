@@ -263,13 +263,14 @@ def _percentiles(values) -> dict[str, float]:
             "p99": float(np.percentile(arr, 99))}
 
 
-def _make_backend(arch: str):
+def _make_backend(arch: str, kernel: str = "dispatch"):
     cfg = configs.get(arch).reduced(n_layers=2, d_model=64, n_heads=4,
                                     n_kv_heads=2, d_ff=128, vocab=128,
                                     head_dim=32)
     params = model.init_params(cfg, jax.random.key(0))
     backend = sectored_decode.make_serving_fns(cfg, params=params,
-                                               seq_len=SEQ_LEN, min_topk=1)
+                                               seq_len=SEQ_LEN, min_topk=1,
+                                               kernel=kernel)
     return cfg, backend
 
 
@@ -578,6 +579,12 @@ def main(argv=None):
     ap.add_argument("--prefix-only", action="store_true",
                     help="run only the prefix-cache oracle + metered "
                          "cold-vs-warm pair (the CI smoke leg)")
+    ap.add_argument("--fused-kernel", action="store_true",
+                    help="serve the sectored path through the single "
+                         "fused Pallas kernel instead of dispatch "
+                         "gather+attend; every oracle (scheduler/"
+                         "preemption/prefix/observer identity) must still "
+                         "pass — the fused step is bitwise with dispatch")
     ap.add_argument("--out", default="BENCH_traffic.json")
     ap.add_argument("--trace-dir", default=".",
                     help="where the flight-recorder JSONL/Perfetto trace "
@@ -589,7 +596,8 @@ def main(argv=None):
     n_requests = 10 if args.smoke else 24
     patterns = (("poisson", "bursty") if args.smoke
                 else ("poisson", "bursty", "diurnal"))
-    cfg, backend = _make_backend(args.arch)
+    cfg, backend = _make_backend(
+        args.arch, kernel="fused" if args.fused_kernel else "dispatch")
 
     # prefix-cache oracle: cold-vs-warm stream identity on the
     # shared-system-prompt mix, then the metered J/token comparison
@@ -623,8 +631,8 @@ def main(argv=None):
             trace_dir=trace_dir, legs=("prefix",))
         payload = dict(arch=cfg.name, smoke=args.smoke, seed=args.seed,
                        temperature=args.temperature, n_requests=n_requests,
-                       pool_page_size=POOL_PAGE_SIZE, prefix=prefix_payload,
-                       obs_oracle=obs_oracle)
+                       pool_page_size=POOL_PAGE_SIZE, kernel=backend.kernel,
+                       prefix=prefix_payload, obs_oracle=obs_oracle)
         out = common.write_bench_json(args.out, payload)
         print(f"wrote {out}")
         return
@@ -669,6 +677,7 @@ def main(argv=None):
         arch=cfg.name, smoke=args.smoke, seed=args.seed,
         temperature=args.temperature, n_requests=n_requests,
         pool_pages=args.pool_pages, pool_page_size=POOL_PAGE_SIZE,
+        kernel=backend.kernel,
         shape_mix=[dict(prompt_len=s[0], max_new_tokens=s[1], weight=w)
                    for s, w in SHAPE_MIX],
         oracle=oracle, obs_oracle=obs_oracle, patterns=results,

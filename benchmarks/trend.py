@@ -78,6 +78,11 @@ SPECS: dict[str, list[Metric]] = {
         _det("j_per_token.adaptive", higher=False),
         _det("savings_vs_dense.adaptive", higher=True),
         _det("sector_coverage.adaptive", higher=False),
+        # int8-KV point: fused_q8 must keep beating the same-width static
+        # leg on energy without the quality bound creeping up
+        _det("j_per_token.quantized", higher=False),
+        _det("quantized.saving_vs_static", higher=True),
+        _det("quantized.logprob_max_abs_err", higher=False),
         # warmest level of the shared-prefix sweep: J/token with the cache
         # hot must not creep up
         _det("prefix.levels.2.j_per_token", higher=False),

@@ -159,6 +159,7 @@ FULL_BURST_BEATS = 8  # DDR4 BL8: beats per full burst; BLOCK_BYTES==8B x 8
 
 def kv_fetch_energy(pages_fetched: float, pages_valid: float, *,
                     page_bytes: float, sectored_hw: bool = True,
+                    word_fraction: float = 1.0,
                     model: DRAMEnergyModel = DEFAULT_ENERGY) -> dict[str, float]:
     """Energy (joules) to read ``pages_fetched`` of ``pages_valid`` KV pages.
 
@@ -166,6 +167,18 @@ def kv_fetch_energy(pages_fetched: float, pages_valid: float, *,
     only the bytes written so far (the VBL analogue — a shortened burst),
     but still costs a whole enabled sector on the ACT side (sector
     activation is all-or-nothing, §4.1).
+
+    ``word_fraction`` is the bytes-per-word term: the fraction of a
+    full-width KV word each fetched beat actually carries (1.0 for the
+    bf16 cache, 0.5 for per-sector int8 quantized KV —
+    ``kernels/quantized_kv.py:kv_word_fraction``). Each 64-byte block's
+    burst shortens to ``FULL_BURST_BEATS * word_fraction`` beats, so the
+    RD charge scales through :func:`rd_power_fraction` — sublinearly,
+    because the burst-length-independent periphery share
+    (:data:`RD_FIXED_SHARE`) is still paid per block. ACT is untouched:
+    a sector activation enables the same wordlines whatever the word
+    width. Quantization doesn't change which rows exist, so it applies
+    on both the sectored and coarse-grained branches.
 
     ``sectored_hw=False`` models the coarse-grained baseline: every touched
     row pays a full 8-sector activation with no sector-logic overhead, and
@@ -178,10 +191,11 @@ def kv_fetch_energy(pages_fetched: float, pages_valid: float, *,
     valid_sectors = int(np.ceil(pages_valid))
     rows_valid = (valid_sectors + NUM_SECTORS - 1) // NUM_SECTORS
     blocks_per_page = page_bytes / BLOCK_BYTES
+    rd_beats = FULL_BURST_BEATS * float(word_fraction)
     if not sectored_hw:
         act_j = rows_valid * float(model.act_energy(NUM_SECTORS,
                                                     sectored_hw=False))
-        rd_j = pages_valid * blocks_per_page * float(model.rd_energy(FULL_BURST_BEATS))
+        rd_j = pages_valid * blocks_per_page * float(model.rd_energy(rd_beats))
         return dict(act_j=act_j, rd_j=rd_j, acts=rows_valid,
                     sectors=float(rows_valid * NUM_SECTORS))
     fetched_sectors = min(int(np.ceil(pages_fetched)), valid_sectors)
@@ -192,7 +206,7 @@ def kv_fetch_energy(pages_fetched: float, pages_valid: float, *,
     acts = min(rows_valid, fetched_sectors)
     act_j = acts * float(model.act_energy(fetched_sectors / acts))
     rd_j = min(float(pages_fetched), float(pages_valid)) * blocks_per_page \
-        * float(model.rd_energy(FULL_BURST_BEATS))
+        * float(model.rd_energy(rd_beats))
     return dict(act_j=act_j, rd_j=rd_j, acts=acts,
                 sectors=float(fetched_sectors))
 

@@ -1,0 +1,33 @@
+"""Execution-mode detection for the Pallas kernel wrappers.
+
+Leaf module: the kernels themselves import it, so it must not import any
+kernel module back (``ops.py`` re-exports :func:`default_interpret` for
+existing call sites).
+
+The kernels ship with ``interpret=None`` defaults resolved here at call
+time: compiled Mosaic on a real TPU backend, the Pallas interpreter
+everywhere else (CPU CI, this container). Before this module existed,
+``vbl_gather`` hard-coded ``interpret=True`` inside its own ``jit`` — a
+production TPU caller that didn't know to override it silently ran the
+kernel body in Python.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """interpret=True unless running on a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel wrapper's ``interpret`` argument.
+
+    ``None`` (the wrappers' default) auto-detects via the JAX backend;
+    an explicit bool is honoured as-is (tests pin ``interpret=True``).
+    """
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)

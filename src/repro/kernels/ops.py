@@ -1,22 +1,18 @@
 """Public jit'd wrappers for the Pallas kernels.
 
 On this CPU container the kernels run in interpret mode (the kernel body
-executes in Python for correctness validation); on TPU hardware set
-``interpret=False`` (or rely on the default backend detection below).
+executes in Python for correctness validation); on TPU hardware the
+wrappers' ``interpret=None`` defaults resolve to compiled Mosaic via
+``kernels/backend.py:default_interpret``.
 """
 
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.backend import default_interpret
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.sectored_attention import sectored_attention
+from repro.kernels.sectored_attention import (sectored_attention,
+                                              sectored_attention_paged)
 from repro.kernels.vbl_gather import vbl_gather
 
-__all__ = ["flash_attention", "sectored_attention", "vbl_gather",
-           "default_interpret"]
-
-
-def default_interpret() -> bool:
-    """interpret=True unless running on a real TPU backend."""
-    return jax.default_backend() != "tpu"
+__all__ = ["flash_attention", "sectored_attention",
+           "sectored_attention_paged", "vbl_gather", "default_interpret"]

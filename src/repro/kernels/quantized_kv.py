@@ -1,0 +1,62 @@
+"""Per-sector int8 KV quantization — the software analog of narrower VBL
+bursts.
+
+The paper's Variable Burst Length shortens a burst by moving fewer *words*;
+quantizing the KV words themselves halves (bf16 -> int8) the bytes every
+fetched sector moves, which `core/power.py:kv_fetch_energy` charges through
+its ``word_fraction`` term. Scales are **per (sequence, page, kv-head)** —
+one f32 per sector per head, stored alongside the paged cache — so a
+sector remains the atomic fetch unit: its payload and its scale travel
+together, and dequantization happens inside the fused kernel's f32
+accumulate (`kernels/sectored_attention.py:sectored_attention_paged`).
+
+The bf16 cache stays the master copy (appends are full-precision and
+`kv_append_energy` is unchanged); quantization is applied at fetch time,
+so exact-mode prefill and the dispatch-based sectored path are untouched.
+Accuracy is tolerance-gated, never bit-gated: see docs/serving.md.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+#: bytes per quantized KV word (int8) vs the bf16 master cache
+KV_QUANT_BYTES = 1
+#: the documented quality bound (docs/serving.md): teacher-forced logprob
+#: max-abs-err of the fused_q8 path vs the f32 dispatch path, on the
+#: reduced benchmark config. Gated by benchmarks/serve_energy.py and
+#: tests/test_kernels_fused.py; trend-tracked in BENCH_energy.json.
+LOGPROB_TOL = 0.1
+
+
+def kv_word_fraction(kv_dtype_bytes: int = 2) -> float:
+    """Fraction of a full-width KV word a quantized fetch moves (the
+    bytes-per-word term of ``kv_fetch_energy``): int8 over bf16 = 0.5."""
+    return KV_QUANT_BYTES / float(kv_dtype_bytes)
+
+
+def quantize_pages(pages):
+    """Symmetric per-(sequence, page, kv-head) int8 quantization.
+
+    pages: (B, P, page, Hkv, hd) — the paged view of one layer's K or V
+    cache. Returns ``(q, scale)`` with q int8 of the same shape and scale
+    (B, P, Hkv) f32 such that ``q * scale ~= pages``.
+
+    Stale rows past ``cache.length`` are quantized along with live ones
+    (they are zeros until overwritten, then whatever the ring left
+    behind); they can inflate a page's maxabs scale but never its
+    correctness — the attention kernels mask those positions to exactly
+    zero weight before the softmax.
+    """
+    amax = jnp.max(jnp.abs(pages.astype(jnp.float32)), axis=(2, 4))
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.round(pages.astype(jnp.float32) / scale[:, :, None, :, None])
+    return jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8), scale
+
+
+def dequantize_pages(q, scale):
+    """Inverse of :func:`quantize_pages` (f32). The fused kernel performs
+    this per fetched page in VMEM; this host-shaped version exists for
+    oracles and error studies."""
+    return q.astype(jnp.float32) * scale[:, :, None, :, None]

@@ -15,8 +15,10 @@ def sectored_attention_ref(q, k_pages, v_pages, page_idx, length):
     k_pages/v_pages: (B, Hkv, P, page, hd).
     page_idx: (B, Hkv, K) int32 selected sectors; a singleton head axis
         ((B, 1, K)) shares one sector set across all kv heads.
-    length: (B,) int32 valid tokens (positions 0..length inclusive exist;
-        `length` is the position of the newest token).
+    length: (B,) int32 **count** of valid tokens (positions 0..length-1
+        exist) — the convention of `attention.decode_attend`, where the
+        token appended at `cache.length` makes `cache.length + 1` rows
+        valid.
     Returns (B, Hkv, rep, hd) float32.
     """
     B, Hkv, P, page, hd = k_pages.shape
@@ -28,7 +30,7 @@ def sectored_attention_ref(q, k_pages, v_pages, page_idx, length):
     scores = jnp.einsum("bgrk,bgcpk->bgrcp", q.astype(jnp.float32),
                         k_sel.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
     tok_pos = page_idx[..., None] * page + jnp.arange(page)
-    valid = tok_pos <= length[:, None, None, None]
+    valid = tok_pos < length[:, None, None, None]
     scores = jnp.where(valid[:, :, None, :, :], scores, NEG_INF)
     m = jnp.max(scores, axis=(-2, -1), keepdims=True)
     e = jnp.where(valid[:, :, None, :, :], jnp.exp(scores - m), 0.0)

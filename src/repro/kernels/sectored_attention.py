@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: sectored decode attention (the paper's SA+VBL on TPU).
+"""Pallas TPU kernels: sectored decode attention (the paper's SA+VBL on TPU).
 
 Hardware mapping (DESIGN.md §2): the Sector Predictor's page indices are
 *scalar-prefetched* so they can steer the BlockSpec index_map — the grid
@@ -8,10 +8,37 @@ never read from HBM at all: that is Sectored Activation + Variable Burst
 Length — the burst (pipeline of page DMAs) has data-dependent length K
 instead of the full sequence.
 
-VMEM working set per step: one K page + one V page (page x hd, e.g.
-128x128 bf16 = 32 KiB each), the query block (rep x hd), and the running
-softmax accumulators — far under the ~16 MiB VMEM budget, with MXU-aligned
-(128-multiple) matmul dims.
+Two entry points share the steering machinery:
+
+* :func:`sectored_attention` — the reference-shaped kernel
+  ((B, Hkv, P, page, hd) KV) asserted **bitwise** against
+  ``kernels/ref.py:sectored_attention_ref`` in tier-1.
+* :func:`sectored_attention_paged` — the serving kernel over the runtime's
+  page-major cache view ((B, P, page, Hkv, hd), a free reshape of the
+  (B, S, Hkv, hd) decode cache). Its unquantized arithmetic mirrors
+  ``runtime/sectored_decode.py:sectored_attend`` operand-for-operand (bf16
+  matmul operands, f32 accumulation, identical mask/softmax/mass
+  formulation), so the fused serving path is bit-exact with the dispatch
+  path; with int8 pages + per-sector scales it dequantizes in the f32
+  accumulate (tolerance-gated, see kernels/quantized_kv.py).
+
+Softmax note: both kernels stream each fetched page's masked scores (and
+its V page) into VMEM scratch and run ONE global softmax + contraction at
+the final grid step, rather than the online max/rescale recurrence. An
+online softmax multiplies the accumulator by ``exp(m_prev - m_new)`` per
+page — a different float expression tree from the two-pass softmax of the
+dispatch path, so it can never be bitwise against it. The scratch cost is
+(rep x K x page) f32 scores + (K x page x hd) V — for serving budgets
+(K ~ P/8 pages of 128 x 128 bf16) comfortably inside the ~16 MiB VMEM.
+
+Length convention: ``length`` is the **count** of valid tokens — positions
+``0 .. length-1`` exist, mask is ``tok_pos < length``. This matches
+``attention.decode_attend`` (which masks ``spos <= cache.length`` with the
+new token sitting AT ``cache.length``, i.e. ``cache.length + 1`` valid
+rows); the pre-fix kernel treated ``length`` as the newest position and
+leaked one extra token whenever a caller passed a count. The newest,
+partially-filled page is thereby masked at its true fill — the in-kernel
+analogue of the paper's shortened VBL burst on the fractional sector.
 """
 
 from __future__ import annotations
@@ -23,75 +50,137 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 NEG_INF = -1e30
 
 
-def _kernel(pages_ref, length_ref,  # scalar prefetch
-            q_ref, k_ref, v_ref,  # VMEM blocks
-            out_ref,  # VMEM output block
-            m_ref, l_ref, acc_ref,  # scratch
-            *, page_size: int, num_selected: int, shared_pages: bool):
+def _check_page_idx(page_idx, hkv: int) -> bool:
+    """Validate page_idx's head axis against the cache and return the
+    shared-pages flag the index maps must agree with.
+
+    The grid steers head ``0 if shared else program_id(1)`` through the
+    scalar-prefetched index table; a silently-wrong flag would make every
+    head walk head 0's pages (or read out of bounds), so shape-vs-flag
+    agreement is enforced loudly here instead of trusted per call site.
+    """
+    if page_idx.ndim != 3:
+        raise ValueError(
+            f"page_idx must be (B, Hkv, K) or (B, 1, K); got shape "
+            f"{page_idx.shape}")
+    heads = page_idx.shape[1]
+    if heads not in (1, hkv):
+        raise ValueError(
+            f"page_idx head axis must be 1 (shared sector set) or Hkv="
+            f"{hkv}; got {heads} — a mismatched head axis would steer "
+            f"every head through the wrong page schedule")
+    return heads == 1 and hkv > 1
+
+
+def _global_softmax_attend(scores, vmask, v_pages):
+    """The final-step softmax + contraction both kernels share.
+
+    scores: (rep, K, page) f32, invalid positions already NEG_INF.
+    vmask:  (K, page) f32 (1.0 = valid).
+    v_pages: (K, page, hd) — bf16 on the serving path (matching the
+    dispatch path's ``e.astype(v.dtype)`` operand cast), f32 on the
+    reference/quantized paths.
+
+    Returns (out (rep, hd) f32, e (rep, K, page) f32). Op-for-op the
+    per-(b, h) slice of the batched formulation in ``sectored_attend`` /
+    ``sectored_attention_ref`` — verified bitwise in tier-1.
+    """
+    valid = vmask != 0.0
+    m = jnp.max(scores, axis=(-2, -1), keepdims=True)
+    e = jnp.where(valid[None], jnp.exp(scores - m), 0.0)
+    num = jnp.einsum("rcp,cpk->rk", e.astype(v_pages.dtype), v_pages,
+                     preferred_element_type=jnp.float32)
+    den = jnp.maximum(jnp.sum(e, axis=(-2, -1)), 1e-30)
+    return num / den[..., None], e
+
+
+def _ref_kernel(pages_ref, length_ref,  # scalar prefetch
+                q_ref, k_ref, v_ref,  # VMEM blocks
+                out_ref,  # VMEM output block
+                s_scr, v_scr, valid_scr,  # scratch
+                *, page_size: int, num_selected: int, shared_pages: bool):
     b = pl.program_id(0)
     h = 0 if shared_pages else pl.program_id(1)
     i = pl.program_id(2)
 
-    @pl.when(i == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
     q = q_ref[0, 0].astype(jnp.float32)  # (rep, hd)
     k = k_ref[0, 0, 0].astype(jnp.float32)  # (page, hd)
-    v = v_ref[0, 0, 0].astype(jnp.float32)  # (page, hd)
-    hd = q.shape[-1]
-
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
-    s = s * (1.0 / jnp.sqrt(jnp.float32(hd)))  # (rep, page)
+    s = jnp.einsum("rk,pk->rp", q, k) / jnp.sqrt(jnp.float32(q.shape[-1]))
 
     page_id = pages_ref[b, h, i]
     tok_pos = page_id * page_size + jax.lax.broadcasted_iota(
         jnp.int32, s.shape, 1)
-    valid = tok_pos <= length_ref[b]
-    s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_ref[...]  # (rep, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    valid = tok_pos < length_ref[b]
+    s_scr[:, i, :] = jnp.where(valid, s, NEG_INF)
+    valid_scr[i, :] = valid[0].astype(jnp.float32)
+    v_scr[i] = v_ref[0, 0, 0].astype(jnp.float32)
 
     @pl.when(i == num_selected - 1)
     def _finish():
-        out_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out, _ = _global_softmax_attend(s_scr[...], valid_scr[...], v_scr[...])
+        out_ref[0, 0] = out
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sectored_attention(q, k_pages, v_pages, page_idx, length,
-                       interpret: bool = True):
-    """q (B,Hkv,rep,hd); k_pages/v_pages (B,Hkv,P,page,hd);
-    page_idx (B,Hkv,K) or (B,1,K) int32; length (B,) int32
-    -> (B,Hkv,rep,hd) f32.
+def _vbl_window(page_id, length_ref, b, shape, *, page_size: int):
+    """Validity of each token slot in the fetched page: the shortened-burst
+    window. ``length`` is a count; the newest page is valid only up to its
+    fill (``length % page_size``), the VBL fractional sector."""
+    tok_pos = page_id * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, shape, 1)
+    return tok_pos < length_ref[b]
 
-    A singleton head axis on ``page_idx`` means one **shared sector set per
-    sequence** (the serving runtime's ``sector_share_heads`` mode, and the
-    layout the shared-prefix demand OR-merge produces): the scalar-prefetched
-    index stream is one per sequence and every kv head walks the same page
-    schedule. Each head's KV slice is distinct data, so a page DMA per
-    (batch, head, step) block still occurs — the win is the Hkv-fold smaller
-    index table and a uniform (more prefetch-friendly) page walk, not fewer
-    copies. Selected pages arrive in ascending order from
-    ``sector_predictor.predict_topk`` (monotone HBM walk).
 
-    interpret=True on CPU; on TPU hardware pass interpret=False.
-    """
+def _paged_kernel(pages_ref, length_ref, q_ref, k_ref, v_ref, *rest,
+                  page_size: int, num_selected: int, shared_pages: bool,
+                  quantized: bool):
+    if quantized:
+        (ks_ref, vs_ref, out_ref, mass_ref,
+         s_scr, v_scr, valid_scr) = rest
+    else:
+        out_ref, mass_ref, s_scr, v_scr, valid_scr = rest
+    b = pl.program_id(0)
+    h = 0 if shared_pages else pl.program_id(1)
+    i = pl.program_id(2)
+
+    q = q_ref[0, 0]  # (rep, hd) — bf16 operand, like the dispatch path
+    k = k_ref[0, 0, :, 0]  # (page, hd)
+    v = v_ref[0, 0, :, 0]
+    if quantized:
+        # dequant in the f32 accumulate: the sector's payload arrived as
+        # int8 (half the burst bytes) with its one per-(page, head) scale
+        q = q.astype(jnp.float32)
+        k = k.astype(jnp.float32) * ks_ref[0, 0, 0]
+        v = v.astype(jnp.float32) * vs_ref[0, 0, 0]
+    s = jnp.einsum("rk,pk->rp", q, k, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(q.shape[-1]))
+
+    page_id = pages_ref[b, h, i]
+    valid = _vbl_window(page_id, length_ref, b, s.shape, page_size=page_size)
+    s_scr[:, i, :] = jnp.where(valid, s, NEG_INF)
+    valid_scr[i, :] = valid[0].astype(jnp.float32)
+    v_scr[i] = v
+
+    @pl.when(i == num_selected - 1)
+    def _finish():
+        out, e = _global_softmax_attend(s_scr[...], valid_scr[...], v_scr[...])
+        out_ref[0, 0] = out
+        # per-page attention mass for the SHT update, summed over the
+        # q-head group — same expression as the dispatch path's step 4
+        mass_ref[0, 0] = jnp.sum(e, axis=(0, 2)) / jnp.maximum(
+            jnp.sum(e), 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("shared", "interpret"))
+def _sectored_attention(q, k_pages, v_pages, page_idx, length, shared: bool,
+                        interpret: bool):
     B, Hkv, rep, hd = q.shape
     _, _, P, page, _ = k_pages.shape
     K = page_idx.shape[-1]
-    shared = page_idx.shape[1] == 1 and Hkv > 1
 
     def kv_map(b, h, i, pages, length):
         return (b, h, pages[b, 0 if shared else h, i], 0, 0)
@@ -107,12 +196,12 @@ def sectored_attention(q, k_pages, v_pages, page_idx, length,
         out_specs=pl.BlockSpec((1, 1, rep, hd),
                                lambda b, h, i, *_: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, 1), jnp.float32),
-            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, K, page), jnp.float32),
+            pltpu.VMEM((K, page, hd), jnp.float32),
+            pltpu.VMEM((K, page), jnp.float32),
         ],
     )
-    kernel = functools.partial(_kernel, page_size=page,
+    kernel = functools.partial(_ref_kernel, page_size=page,
                                num_selected=K, shared_pages=shared)
     return pl.pallas_call(
         kernel,
@@ -120,3 +209,116 @@ def sectored_attention(q, k_pages, v_pages, page_idx, length,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), jnp.float32),
         interpret=interpret,
     )(page_idx, length, q, k_pages, v_pages)
+
+
+def sectored_attention(q, k_pages, v_pages, page_idx, length,
+                       interpret: bool | None = None):
+    """q (B,Hkv,rep,hd); k_pages/v_pages (B,Hkv,P,page,hd);
+    page_idx (B,Hkv,K) or (B,1,K) int32; length (B,) int32 **count** of
+    valid tokens (positions 0..length-1 exist) -> (B,Hkv,rep,hd) f32.
+
+    Bitwise target: ``kernels/ref.py:sectored_attention_ref``.
+
+    A singleton head axis on ``page_idx`` means one **shared sector set per
+    sequence** (the serving runtime's ``sector_share_heads`` mode, and the
+    layout the shared-prefix demand OR-merge produces): the scalar-prefetched
+    index stream is one per sequence and every kv head walks the same page
+    schedule. Each head's KV slice is distinct data, so a page DMA per
+    (batch, head, step) block still occurs — the win is the Hkv-fold smaller
+    index table and a uniform (more prefetch-friendly) page walk, not fewer
+    copies. Selected pages arrive in ascending order from
+    ``sector_predictor.predict_topk`` (monotone HBM walk).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
+    """
+    shared = _check_page_idx(page_idx, q.shape[1])
+    return _sectored_attention(q, k_pages, v_pages, page_idx, length,
+                               shared=shared,
+                               interpret=backend.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("shared", "interpret"))
+def _sectored_attention_paged(q, k_pages, v_pages, page_idx, length,
+                              k_scale, v_scale, shared: bool,
+                              interpret: bool):
+    B, Hkv, rep, hd = q.shape
+    _, P, page, _, _ = k_pages.shape
+    K = page_idx.shape[-1]
+    quantized = k_scale is not None
+
+    def kv_map(b, h, i, pages, length):
+        return (b, pages[b, 0 if shared else h, i], 0, h, 0)
+
+    def scale_map(b, h, i, pages, length):
+        return (b, pages[b, 0 if shared else h, i], h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, hd), lambda b, h, i, *_: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, page, 1, hd), kv_map),
+        pl.BlockSpec((1, 1, page, 1, hd), kv_map),
+    ]
+    operands = [page_idx, length, q, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, 1), scale_map),
+                     pl.BlockSpec((1, 1, 1), scale_map)]
+        operands += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, K),
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((1, 1, rep, hd), lambda b, h, i, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, K), lambda b, h, i, *_: (b, h, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((rep, K, page), jnp.float32),
+            pltpu.VMEM((K, page, hd),
+                       jnp.float32 if quantized else k_pages.dtype),
+            pltpu.VMEM((K, page), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, page_size=page,
+                               num_selected=K, shared_pages=shared,
+                               quantized=quantized)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B, Hkv, rep, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hkv, K), jnp.float32)),
+        interpret=interpret,
+    )(*operands)
+
+
+def sectored_attention_paged(q, k_pages, v_pages, page_idx, length, *,
+                             k_scale=None, v_scale=None,
+                             interpret: bool | None = None):
+    """Serving-path fused kernel over the page-major cache view.
+
+    q (B,Hkv,rep,hd) — the runtime's grouped query (bf16 in serving);
+    k_pages/v_pages (B,P,page,Hkv,hd) — ``cache.k.reshape(B, -1, page,
+    Hkv, hd)``, a FREE reshape of the decode cache (no copy);
+    page_idx (B,Hkv,K) or (B,1,K) int32; length (B,) int32 count of valid
+    tokens **including** the token appended this step (the runtime passes
+    ``cache.length + 1``).
+
+    Returns ``(out (B,Hkv,rep,hd) f32, mass (B,Hkv,K) f32)`` — ``out``
+    before the caller's ``.astype(x.dtype)`` and output projection,
+    ``mass`` the per-selected-page attention mass for the SHT update.
+
+    Unquantized (``k_scale is None``): arithmetic mirrors
+    ``sectored_attend``'s gather+attend operand-for-operand — bf16 matmul
+    operands with f32 accumulation, ``e`` cast to the V dtype before the
+    output contraction — so fused and dispatch paths are **bitwise**
+    identical (the tier-1 oracle).
+
+    Quantized: ``k_pages``/``v_pages`` are int8 with per-(sequence, page,
+    kv-head) scales ``k_scale``/``v_scale`` (B,P,Hkv) f32, fetched through
+    the same scalar-prefetched steering and dequantized in the kernel's
+    f32 accumulate. Tolerance-gated, not bit-gated.
+    """
+    shared = _check_page_idx(page_idx, k_pages.shape[3])
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    return _sectored_attention_paged(
+        q, k_pages, v_pages, page_idx, length, k_scale, v_scale,
+        shared=shared, interpret=backend.resolve_interpret(interpret))

@@ -18,7 +18,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
 from repro.core.sectors import NUM_SECTORS
+from repro.kernels import backend
 
 
 def _kernel(mask_ref, data_ref, out_ref, cnt_ref):
@@ -38,9 +40,20 @@ def _kernel(mask_ref, data_ref, out_ref, cnt_ref):
     jax.lax.fori_loop(0, NUM_SECTORS, body, None)
 
 
+def vbl_gather(data, masks, interpret: bool | None = None):
+    """data (N, 8, W); masks (N,) uint32 -> (packed (N, 8, W), counts (N,)).
+
+    ``interpret=None`` auto-detects via the JAX backend: compiled Mosaic
+    on TPU, the Pallas interpreter on CPU/CI. (The previous
+    ``interpret=True`` default meant any production caller that didn't
+    know to override it silently ran the kernel body in Python on TPU.)
+    """
+    return _vbl_gather(data, masks,
+                       interpret=backend.resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def vbl_gather(data, masks, interpret: bool = True):
-    """data (N, 8, W); masks (N,) uint32 -> (packed (N, 8, W), counts (N,))."""
+def _vbl_gather(data, masks, interpret: bool):
     N, S, W = data.shape
     assert S == NUM_SECTORS
     out_shape = (

@@ -12,6 +12,11 @@ Backend modes:
   is the bit-exact exact mode (every valid page fetched) and the
   high-occupancy path is predictor top-k with the shared-prefix
   sector-demand OR-merge pooling SHT scores across slots before each fetch.
+* ``--fused-kernel`` (needs ``--true-sectored``) — the sectored decode
+  step runs as ONE Pallas kernel (scalar-prefetched page steering →
+  per-page DMA → softmax attend), bit-exact with the dispatch path;
+  ``--kv-quant`` additionally reads per-sector int8 KV dequantized
+  inside the kernel (tolerance-gated — see docs/serving.md).
 
 Scheduler modes (``--scheduler``):
 
@@ -79,16 +84,27 @@ from repro.telemetry import KVGeometry, MeteredBackend
 
 
 def build_backend(cfg, params, *, sectored=True, true_sectored=False,
-                  seq_len=256):
-    """The data-path object: SectoredState-backed or dense DecodeState."""
+                  seq_len=256, kernel="dispatch"):
+    """The data-path object: SectoredState-backed or dense DecodeState.
+
+    ``kernel`` picks the sectored decode flavor (``--fused-kernel`` /
+    ``--kv-quant``): ``"dispatch"`` (batched gather+attend), ``"fused"``
+    (single Pallas kernel, bit-exact with dispatch), or ``"fused_q8"``
+    (fused + per-sector int8 KV, tolerance-gated).
+    """
     if true_sectored and (cfg.attn_free or cfg.layer_pattern):
         raise ValueError(
             f"--true-sectored needs uniform attention layers; arch "
             f"{cfg.name!r} is attention-free or hybrid. Drop the flag to "
             f"serve it on the dense path.")
+    if kernel != "dispatch" and not true_sectored:
+        raise ValueError(
+            "--fused-kernel/--kv-quant need --true-sectored (the dense "
+            "DecodeState backend has no paged KV for the kernel to steer)")
     if true_sectored:
         backend = sectored_decode.make_serving_fns(cfg, params=params,
-                                                   seq_len=seq_len)
+                                                   seq_len=seq_len,
+                                                   kernel=kernel)
         if not sectored:
             backend.sectored_fn = None
         return backend
@@ -128,9 +144,11 @@ def build_session(cfg, params, *, max_batch=4, sectored=True,
                   mesh=None, bg_energy=False,
                   page_pool: KVPagePool | None = None,
                   prefix_cache: PrefixCache | None = None,
-                  obs: FlightRecorder | None = None) -> ServeSession:
+                  obs: FlightRecorder | None = None,
+                  kernel="dispatch") -> ServeSession:
     backend = build_backend(cfg, params, sectored=sectored,
-                            true_sectored=true_sectored, seq_len=seq_len)
+                            true_sectored=true_sectored, seq_len=seq_len,
+                            kernel=kernel)
     if telemetry or policy == "adaptive":
         # the dense DecodeState backend carries no kv_geometry(); derive one
         # from the model config so the meter can convert counters to joules
@@ -191,6 +209,17 @@ def main(argv=None):
     ap.add_argument("--true-sectored", action="store_true",
                     help="serve on SectoredState (exact/top-k paths + "
                          "shared-prefix demand merge)")
+    ap.add_argument("--fused-kernel", action="store_true",
+                    help="with --true-sectored: run the sectored decode "
+                         "step as ONE Pallas kernel (scalar-prefetched "
+                         "page steering + per-page DMA + softmax attend); "
+                         "bit-exact with the dispatch path")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="with --fused-kernel: per-sector int8 KV "
+                         "quantization — narrower reads (half the bytes "
+                         "per word, the paper's VBL analog) dequantized "
+                         "inside the kernel; tolerance-gated, not "
+                         "bit-exact (see docs/serving.md)")
     ap.add_argument("--telemetry", action="store_true",
                     help="meter every wave against the DRAM power model "
                          "and print an end-of-run energy/coverage table")
@@ -280,6 +309,14 @@ def main(argv=None):
     if args.kv_page_size is not None and args.kv_pages is None:
         ap.error("--kv-page-size needs --kv-pages (an unbounded pool has "
                  "no page granularity to configure)")
+    if args.kv_quant and not args.fused_kernel:
+        # quantization lives inside the fused kernel's dequant stage; the
+        # dispatch path has no narrow-read analog — refuse loudly
+        ap.error("--kv-quant needs --fused-kernel (dequant runs inside "
+                 "the fused kernel; the dispatch path reads full-width)")
+    if args.fused_kernel and not args.true_sectored:
+        ap.error("--fused-kernel needs --true-sectored (the dense backend "
+                 "has no paged KV for the kernel to steer)")
     if args.prefix_cache and not args.true_sectored:
         # the dense DecodeState backend cannot seed a slot from a cached
         # KV prefix (no state_prefix/suffix_prefill) — refuse loudly
@@ -308,6 +345,8 @@ def main(argv=None):
                         else dict(page_size=args.kv_page_size))
         prefix_cache = PrefixCache(args.prefix_cache_pages, **cache_kwargs)
     obs = FlightRecorder(MetricsRegistry()) if args.obs else None
+    kernel = ("fused_q8" if args.kv_quant
+              else "fused" if args.fused_kernel else "dispatch")
     sess = build_session(cfg, params, max_batch=args.max_batch,
                          scheduler=args.scheduler,
                          vectorized=args.engine == "vectorized",
@@ -315,7 +354,7 @@ def main(argv=None):
                          telemetry=telemetry, policy=args.policy,
                          mesh=args.mesh, bg_energy=args.bg_energy,
                          page_pool=page_pool, prefix_cache=prefix_cache,
-                         obs=obs)
+                         obs=obs, kernel=kernel)
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab,
                           size=args.shared_prefix).astype(np.int32)

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.kernels import ops, quantized_kv
 from repro.models import attention, layers, model, moe
 from repro.parallel import sharding
 from repro.runtime import sector_predictor
@@ -93,7 +94,7 @@ def init_state(cfg, batch, seq_len, dtype=jnp.bfloat16) -> SectoredState:
 
 
 def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int,
-                    probe: bool = False):
+                    probe: bool = False, kernel: str = "dispatch"):
     """One-token decode attention over predictor-selected KV sectors.
 
     x: (B,1,D). Returns (out, new_cache, new_table_l).
@@ -105,6 +106,20 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int,
     decaying toward zero (the paper's periodic SHT refresh). Off by
     default — exact mode and direct callers keep bit-exact behaviour; the
     serving backend enables it whenever the budget is genuinely narrow.
+
+    ``kernel`` selects how steps 2–3 execute:
+
+    * ``"dispatch"`` (default) — gather the selected pages, then attend,
+      as separate XLA dispatches.
+    * ``"fused"`` — ONE Pallas kernel (``ops.sectored_attention_paged``)
+      whose scalar-prefetched page indices steer per-page HBM->VMEM DMAs
+      straight into the attend (SA+VBL in a single kernel); arithmetic is
+      operand-for-operand the dispatch attend, so tokens, logprobs and
+      the SHT mass are **bitwise** identical to ``"dispatch"``.
+    * ``"fused_q8"`` — the fused kernel over per-sector int8 KV
+      (``kernels/quantized_kv.py``): pages are quantized from the bf16
+      master cache with per-(sequence, page, kv-head) scales and
+      dequantized inside the kernel's f32 accumulate. Tolerance-gated.
     """
     B = x.shape[0]
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
@@ -134,6 +149,19 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int,
             shared, cache.length, PAGE_SIZE, select_k,
             probe_page=probe_page)  # (B, 1, K)
         pages = jnp.broadcast_to(pages1, (B, hkv, select_k))
+        page_idx = pages1  # singleton head axis: shared sector set
+    else:
+        # 1. sector bits: predictor top-k pages per (B, Hkv)
+        pages = sector_predictor.predict_topk(
+            table_l, cache.length, PAGE_SIZE, select_k,
+            probe_page=probe_page)  # (B, Hkv, K)
+        page_idx = pages
+
+    if kernel != "dispatch":
+        return _attend_fused(attn_params, cfg, x, q, k, v, cache, table_l,
+                             page_idx, pages, quantized=(kernel == "fused_q8"))
+
+    if share_heads:
         kp = k.reshape(B, -1, PAGE_SIZE, hkv, hd)
         vp = v.reshape(B, -1, PAGE_SIZE, hkv, hd)
         k_g = jnp.take_along_axis(
@@ -144,10 +172,6 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int,
         k_sel = k_g.transpose(0, 3, 1, 2, 4)  # (B, Hkv, K, page, hd)
         v_sel = v_g.transpose(0, 3, 1, 2, 4)
     else:
-        # 1. sector bits: predictor top-k pages per (B, Hkv)
-        pages = sector_predictor.predict_topk(
-            table_l, cache.length, PAGE_SIZE, select_k,
-            probe_page=probe_page)  # (B, Hkv, K)
         # 2. VBL gather: only the selected pages move (K*PAGE tokens, not S)
         kp = k.reshape(B, -1, PAGE_SIZE, hkv, hd)
         vp = v.reshape(B, -1, PAGE_SIZE, hkv, hd)
@@ -190,14 +214,58 @@ def sectored_attend(attn_params, cfg, x, cache, table_l, k_pages: int,
     return out, new_cache, new_table
 
 
+def _attend_fused(attn_params, cfg, x, q, k, v, cache, table_l, page_idx,
+                  pages, *, quantized: bool):
+    """Steps 2–4 of :func:`sectored_attend` as ONE Pallas kernel.
+
+    ``q`` is the prologue's query projection; ``k``/``v`` the post-append
+    caches; ``page_idx`` the predictor selection as the kernel wants it
+    ((B,1,K) in ``sector_share_heads`` mode, (B,Hkv,K) otherwise) and
+    ``pages`` the head-broadcast copy the SHT update consumes — identical
+    to what the dispatch path feeds it.
+
+    The page-major view is a free reshape (no copy); the kernel's
+    scalar-prefetched index steering fetches exactly the selected pages
+    HBM->VMEM and masks the newest page's tail at ``cache.length + 1``
+    valid tokens (the count convention of ``kernels/sectored_attention``),
+    which is bit-for-bit the dispatch path's ``tok_pos <= cache.length``.
+    The unquantized kernel mirrors the dispatch attend op-for-op and this
+    epilogue mirrors its tail, so the whole step is bitwise identical.
+    """
+    B = x.shape[0]
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    rep = cfg.n_heads // hkv
+    qg = q[:, 0].reshape(B, hkv, rep, hd)
+    kp = k.reshape(B, -1, PAGE_SIZE, hkv, hd)
+    vp = v.reshape(B, -1, PAGE_SIZE, hkv, hd)
+    if quantized:
+        kq, k_scale = quantized_kv.quantize_pages(kp)
+        vq, v_scale = quantized_kv.quantize_pages(vp)
+        out, mass = ops.sectored_attention_paged(
+            qg, kq, vq, page_idx, cache.length + 1,
+            k_scale=k_scale, v_scale=v_scale)
+    else:
+        out, mass = ops.sectored_attention_paged(
+            qg, kp, vp, page_idx, cache.length + 1)
+    out = out.astype(x.dtype).reshape(B, 1, cfg.n_heads, hd)
+    out = jnp.einsum("bqhk,hkd->bqd", out, attn_params["wo"])
+    new_table = sector_predictor.update(table_l, pages, mass)
+    new_cache = attention.KVCache(k=k, v=v, length=cache.length + 1)
+    return out, new_cache, new_table
+
+
 def sectored_decode_step(params, cfg, state: SectoredState, token,
-                         k_pages: int, probe: bool = False):
+                         k_pages: int, probe: bool = False,
+                         kernel: str = "dispatch"):
     """Full-model one-token decode with sectored attention per layer.
 
     ``probe`` forwards to :func:`sectored_attend` — default off, so direct
     callers (the exact-mode oracle, mesh factories, prefill scans) keep
     their bit-exact selection; ``SectoredKVBackend`` turns it on for
-    genuinely narrow page budgets."""
+    genuinely narrow page budgets. ``kernel`` likewise forwards (see
+    :func:`sectored_attend`): ``"fused"`` runs the single-Pallas-kernel
+    attend (bitwise with ``"dispatch"``), ``"fused_q8"`` adds per-sector
+    int8 KV (tolerance-gated)."""
     x = layers.embed(params, token)
     if cfg.n_layers == 0:  # dry-run probe base
         hidden = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -207,7 +275,8 @@ def sectored_decode_step(params, cfg, state: SectoredState, token,
         lp, cache, table_l = scans
         h = layers.rms_norm(x, lp["norm1"], cfg.norm_eps)
         att, cache_new, table_new = sectored_attend(
-            lp["attn"], cfg, h, cache, table_l, k_pages, probe=probe)
+            lp["attn"], cfg, h, cache, table_l, k_pages, probe=probe,
+            kernel=kernel)
         x = x + att
         h = layers.rms_norm(x, lp["norm2"], cfg.norm_eps)
         if cfg.moe:
@@ -294,13 +363,24 @@ class SectoredKVBackend(ServingBackend):
     compiled sectored step serves every sampler mix.
     """
 
+    KERNELS = ("dispatch", "fused", "fused_q8")
+
     def __init__(self, cfg, params, *, seq_len: int,
-                 topk_frac: float = TOPK_FRAC, min_topk: int = MIN_TOPK):
+                 topk_frac: float = TOPK_FRAC, min_topk: int = MIN_TOPK,
+                 kernel: str = "dispatch"):
+        if kernel not in self.KERNELS:
+            raise ValueError(f"kernel must be one of {self.KERNELS}; "
+                             f"got {kernel!r}")
         self.cfg = cfg
         self.params = params
         self.seq_len = seq_len
         self.topk_frac = topk_frac
         self.min_topk = min_topk
+        # how genuinely-sectored steps attend (see sectored_attend): the
+        # exact path (k == pages) and prefill always run "dispatch" — they
+        # carry the dense-parity and prefix-cache bitwise contracts, and
+        # exact mode has no narrowed fetch for a fused kernel to win on
+        self.kernel = kernel
         self.pages = ((n_pages(seq_len + 8) + 7) // 8) * 8
         self._k_cache: dict[int, Any] = {}
         self._prefill_cache: dict[int, Any] = {}
@@ -321,8 +401,10 @@ class SectoredKVBackend(ServingBackend):
             # the SHT stays honest on long narrow runs; exact mode
             # (k == pages) stays probe-free and bit-exact with dense
             probe = self.probe_pages_for(k_pages) > 0
+            kernel = self.kernel if 0 < k_pages < self.pages else "dispatch"
             fn = jax.jit(lambda state, token: sectored_decode_step(
-                params, cfg, state, token, k_pages, probe=probe))
+                params, cfg, state, token, k_pages, probe=probe,
+                kernel=kernel))
             self._k_cache[k_pages] = fn
         return fn
 
@@ -341,11 +423,19 @@ class SectoredKVBackend(ServingBackend):
                    self.pages)
 
     def kv_geometry(self):
-        """Cache layout for :class:`repro.telemetry.meters.WaveMeter`."""
+        """Cache layout for :class:`repro.telemetry.meters.WaveMeter`.
+
+        A ``fused_q8`` backend's sectored fetches move int8 words, so the
+        geometry carries the bytes-per-word fraction the meter feeds into
+        ``kv_fetch_energy`` (prefill and exact/dense waves read the bf16
+        master cache and stay at full width)."""
         from repro.telemetry.meters import KVGeometry
+        word_fraction = (quantized_kv.kv_word_fraction()
+                         if self.kernel == "fused_q8" else 1.0)
         return KVGeometry.from_model_cfg(self.cfg, seq_len=self.seq_len,
                                          page_size=PAGE_SIZE,
-                                         total_pages=self.pages)
+                                         total_pages=self.pages,
+                                         kv_word_fraction=word_fraction)
 
     def sectored_fn_for(self, topk_frac: float | None):
         if topk_frac is None:
@@ -447,15 +537,19 @@ class SectoredKVBackend(ServingBackend):
 
 def make_serving_fns(cfg, *, params, seq_len: int,
                      topk_frac: float = TOPK_FRAC,
-                     min_topk: int = MIN_TOPK) -> SectoredKVBackend:
+                     min_topk: int = MIN_TOPK,
+                     kernel: str = "dispatch") -> SectoredKVBackend:
     """Build the SectoredState serving backend.
 
     Returns a :class:`SectoredKVBackend`; it still unpacks as the legacy
     ``(prefill_fn, exact_fn, sectored_fn, merge_fn)`` 4-tuple for
-    pre-redesign call sites.
+    pre-redesign call sites. ``kernel`` selects the sectored decode
+    flavor ("dispatch" | "fused" | "fused_q8" — see
+    :func:`sectored_attend`).
     """
     return SectoredKVBackend(cfg, params, seq_len=seq_len,
-                             topk_frac=topk_frac, min_topk=min_topk)
+                             topk_frac=topk_frac, min_topk=min_topk,
+                             kernel=kernel)
 
 
 def bytes_saved_fraction(seq_len: int, topk_frac: float = TOPK_FRAC) -> float:

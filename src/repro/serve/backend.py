@@ -112,6 +112,17 @@ class ServingBackend:
         The base backend has one fixed sectored callable and ignores the
         hint; backends that compile per-k variants (see
         ``runtime.sectored_decode.SectoredKVBackend``) override this.
+        Per-k backends may additionally carry a **kernel flavor**
+        (``SectoredKVBackend.KERNELS``): ``"dispatch"`` runs the batched
+        gather+attend formulation, ``"fused"`` runs the single Pallas
+        kernel (scalar-prefetched page steering + per-page DMA + softmax
+        attend; bit-exact with dispatch), and ``"fused_q8"`` adds
+        per-sector int8 KV dequant inside the kernel (tolerance-gated,
+        not bit-exact — see docs/serving.md). The flavor is a backend
+        construction choice; ``sectored_fn_for`` returns steps of
+        whatever flavor the backend was built with, falling back to
+        dispatch only for the exact (all-pages) path where the fused
+        kernel's top-k steering does not apply.
         """
         if self.sectored_fn is None:
             raise ValueError("backend has no sectored decode path")

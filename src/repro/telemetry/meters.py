@@ -51,12 +51,20 @@ class KVGeometry:
     ``page_kv_bytes`` is the K+V footprint of ONE page in ONE layer across
     all kv heads — per-wave traffic scales by ``n_layers`` because every
     layer re-fetches its own cache.
+
+    ``kv_word_fraction`` is the bytes-per-word term of sectored decode
+    fetches (``power.kv_fetch_energy``): 1.0 for the bf16 cache, 0.5 when
+    the backend's fused kernel reads per-sector int8 KV
+    (``kernels/quantized_kv.py``). It applies ONLY to sectored decode
+    reads — prefill, dense/exact waves and the one-token append all move
+    the full-width master cache.
     """
 
     page_size: int  # tokens per KV page (one sector)
     total_pages: int  # page capacity of the padded cache
     page_kv_bytes: float  # K+V bytes per page per layer (all kv heads)
     n_layers: int
+    kv_word_fraction: float = 1.0
 
     @property
     def token_kv_bytes(self) -> float:
@@ -66,7 +74,8 @@ class KVGeometry:
     @classmethod
     def from_model_cfg(cls, cfg, *, seq_len: int, page_size: int,
                        kv_dtype_bytes: int = 2,
-                       total_pages: int | None = None) -> "KVGeometry":
+                       total_pages: int | None = None,
+                       kv_word_fraction: float = 1.0) -> "KVGeometry":
         """Geometry for a model config (bf16 KV cache by default).
 
         ``total_pages`` overrides the plain ``ceil(seq_len / page_size)``
@@ -79,7 +88,8 @@ class KVGeometry:
             total_pages = max(math.ceil(seq_len / page_size), 1)
         return cls(page_size=page_size, total_pages=total_pages,
                    page_kv_bytes=float(page_kv_bytes),
-                   n_layers=cfg.n_layers)
+                   n_layers=cfg.n_layers,
+                   kv_word_fraction=kv_word_fraction)
 
 
 def attn_mass_captured(table: np.ndarray, position: int, page_size: int,
@@ -122,6 +132,11 @@ def _zero_totals() -> dict[str, float]:
                 pages_fetched=0.0, pages_valid=0.0, acts=0, sectors=0.0,
                 act_j=0.0, rd_j=0.0, wr_j=0.0, prefill_j=0.0, wall_s=0.0,
                 bg_j=0.0, ref_j=0.0, busy_ns=0.0, demand_merges=0,
+                # decode-fetch byte books: bytes actually moved by sectored
+                # decode reads, and the bytes per-sector int8 quantization
+                # shaved off them (kv_word_fraction < 1) — both derived
+                # from the same host counters as the joules
+                fetched_bytes=0.0, quant_saved_bytes=0.0,
                 # prefix-cache attribution (serve.prefix): prompt tokens
                 # whose KV a warm admission reused instead of re-prefilling,
                 # and the decode ACT/RD joules amortized away across
@@ -321,7 +336,8 @@ class WaveMeter:
             for s in members:
                 share_of[int(s)] = (len(members), units)
         wave = dict(act_j=0.0, rd_j=0.0, wr_j=0.0, fetched=0.0, valid=0.0,
-                    acts=0, sectors=0.0, bg_j=0.0, ref_j=0.0, busy_ns=0.0)
+                    acts=0, sectors=0.0, bg_j=0.0, ref_j=0.0, busy_ns=0.0,
+                    fetched_bytes=0.0, quant_saved_bytes=0.0)
         masses = []
         for slot, rid, position in slots:
             valid_pages = min(position // g.page_size + 1, g.total_pages)
@@ -332,14 +348,20 @@ class WaveMeter:
                 # the newest (partial) page is always selected (recency
                 # bonus), so it contributes its written fraction only
                 fetched_units = (k_slot - 1) + partial
+                # only genuinely sectored fetches go through the fused
+                # kernel's quantized pages; dense/exact waves read the
+                # full-width bf16 master cache
+                word_fraction = g.kv_word_fraction
             else:
                 # dense wave — or coarse-grained hardware, which moves
                 # every valid page no matter what the policy asked for
                 k_slot = valid_pages
                 fetched_units = valid_units
+                word_fraction = 1.0
             fetch = power.kv_fetch_energy(fetched_units, valid_units,
                                           page_bytes=g.page_kv_bytes,
                                           sectored_hw=self.sectored_hw,
+                                          word_fraction=word_fraction,
                                           model=self.model)
             act_j = g.n_layers * fetch["act_j"]
             rd_j = g.n_layers * fetch["rd_j"]
@@ -361,6 +383,9 @@ class WaveMeter:
             wave["valid"] += valid_units
             wave["acts"] += g.n_layers * fetch["acts"]
             wave["sectors"] += g.n_layers * fetch["sectors"]
+            full_bytes = g.n_layers * fetched_units * g.page_kv_bytes
+            wave["fetched_bytes"] += full_bytes * word_fraction
+            wave["quant_saved_bytes"] += full_bytes * (1.0 - word_fraction)
             req = self._req(rid)
             req["energy_j"] += act_j + rd_j + wr_j
             req["tokens"] += 1
@@ -397,6 +422,8 @@ class WaveMeter:
         t["bg_j"] += wave["bg_j"]
         t["ref_j"] += wave["ref_j"]
         t["busy_ns"] += wave["busy_ns"]
+        t["fetched_bytes"] += wave["fetched_bytes"]
+        t["quant_saved_bytes"] += wave["quant_saved_bytes"]
         t["wall_s"] += wall_s
 
         record = dict(

@@ -57,12 +57,18 @@ def setup():
 
 
 def _run(cfg, params, *, mesh_spec, scheduler_cls, n_requests=12,
-         max_batch=8, max_new_tokens=5, seed=3, sampled=False):
+         max_batch=8, max_new_tokens=5, seed=3, sampled=False,
+         kernel="dispatch", seq_len=48, prompt_len=6):
     """One drained metered session; returns (tokens, joules, session).
 
     ``sampled=True`` attaches the deterministic mixed greedy+sampled
-    specs of :func:`_sampler_for` — the stochastic arm of the oracle."""
-    inner = sectored_decode.make_serving_fns(cfg, params=params, seq_len=48)
+    specs of :func:`_sampler_for` — the stochastic arm of the oracle.
+    ``kernel``/``seq_len``/``prompt_len`` drive the fused-kernel arm: the
+    fused Pallas step only engages when the cache spans multiple pages
+    and the predictor selects a strict subset, which needs prompts well
+    past one ``PAGE_SIZE``."""
+    inner = sectored_decode.make_serving_fns(cfg, params=params,
+                                             seq_len=seq_len, kernel=kernel)
     backend = MeteredBackend(inner)
     if mesh_spec is not None:
         backend = MeshBackend(backend,
@@ -71,7 +77,7 @@ def _run(cfg, params, *, mesh_spec, scheduler_cls, n_requests=12,
                         scheduler=scheduler_cls(), policy=AlwaysSectored())
     rng = np.random.default_rng(seed)
     handles = [sess.submit(Request(
-        rid, rng.integers(0, cfg.vocab, size=6).astype(np.int32),
+        rid, rng.integers(0, cfg.vocab, size=prompt_len).astype(np.int32),
         max_new_tokens=max_new_tokens,
         sampler=_sampler_for(rid) if sampled else None))
         for rid in range(n_requests)]
@@ -217,6 +223,33 @@ def test_cross_mesh_oracle_sampled_tokens_and_joules(setup, eight_devices,
             f"sampled joules diverged on mesh {spec}"
         assert sess.meter.mesh_shape == tuple(
             int(x) for x in spec.split("x"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scheduler_cls", [FifoScheduler, OverlapScheduler],
+                         ids=["fifo", "overlap"])
+def test_cross_mesh_oracle_fused_kernel(setup, eight_devices, scheduler_cls):
+    """The fused-kernel arm of the cross-mesh oracle: with
+    ``kernel='fused'`` the whole sectored attend runs as one Pallas call
+    whose page DMA is steered by scalar-prefetched predictor indices —
+    and the placement must still be invisible. The reference is the
+    unmeshed DISPATCH backend, so this asserts fused == dispatch AND
+    mesh-invariance in one sweep (tokens and joules, ``==`` not approx).
+    Long prompts (200 tokens over a 3-page cache) force the fused step
+    to actually engage; at the other tests' seq_len=48 the single-page
+    cache always falls back to dispatch."""
+    cfg, params = setup
+    kw = dict(scheduler_cls=scheduler_cls, n_requests=6, max_batch=4,
+              seq_len=384, prompt_len=200)
+    ref_tokens, ref_joules, _ = _run(cfg, params, mesh_spec=None,
+                                     kernel="dispatch", **kw)
+    for spec in (None,) + MESH_SHAPES:
+        tokens, joules, _ = _run(cfg, params, mesh_spec=spec,
+                                 kernel="fused", **kw)
+        assert tokens == ref_tokens, \
+            f"fused token stream diverged from dispatch on mesh {spec}"
+        assert joules == ref_joules, \
+            f"fused joules diverged from dispatch on mesh {spec}"
 
 
 def test_wave_buffer_lands_on_mesh_shardings(setup, eight_devices):
