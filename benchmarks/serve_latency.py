@@ -1,0 +1,224 @@
+"""Serving DRAM service time: modeled latency of dense vs sectored fetches.
+
+The performance half of the paper's claim (§7.2): sectored ACTs draw
+fewer tFAW power-delivery tokens and sectored reads move fewer bursts,
+so the DRAM command stream a decode wave issues *completes sooner* —
+energy and latency fall out of the same counters. This bench drives the
+same serving legs as ``serve_energy.py`` over one shared backend and
+reports the command-timeline replay's modeled DRAM-limited service time
+(``dram_ns``, ``repro.obs.commands``) instead of joules:
+
+* ``dense``    — coarse-grained baseline (``sectored_hw=False``):
+  full-row ACTs at full tFAW cost, every valid page on the bus.
+* ``static``   — ``AlwaysSectored`` at the fixed 0.7 provision width.
+* ``adaptive`` — ``AdaptiveSectorPolicy`` capped at the static width.
+* ``fused``    — the static width served by the fused Pallas kernel:
+  bit-identical streams AND counters, so its modeled service time must
+  EQUAL static's exactly (kernel choice is invisible to the DRAM model).
+* ``quantized``— the static width through ``fused_q8``: int8 KV halves
+  the beats per fetched word (the VBL shortened burst), so the bus phase
+  — dominant at this page size — shrinks with the bytes.
+
+Asserted ordering (SystemExit on violation; the CI gate rides on it):
+adaptive < static < dense on modeled ns/token, fused == static
+bit-exactly, quantized < static. All times are modeled from host
+counters — deterministic, machine-independent, never wall-clock (that
+distinction is docs/serving.md's; wall throughput is serve_throughput's
+job). Results land in ``BENCH_latency.json`` for ``trend.py``.
+
+Run: PYTHONPATH=src python benchmarks/serve_latency.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import model
+from repro.obs import FlightRecorder
+from repro.runtime import sectored_decode
+from repro.serve import (AdaptiveSectorPolicy, AlwaysDense, AlwaysSectored,
+                         FifoScheduler, OverlapScheduler, Request,
+                         ServeSession)
+from repro.telemetry import MeteredBackend
+
+try:
+    from benchmarks import common
+except ImportError:  # run as `python benchmarks/serve_latency.py`
+    import common
+
+SEQ_LEN = 768  # 6 pages at PAGE_SIZE=128: room for the widths to differ
+#: static provision width. Deliberately narrower than serve_energy.py's
+#: 0.7: at this shape 0.7 resolves to 4 pages + the per-wave probe page
+#: = every valid page, which is *time*-neutral by construction (the bus
+#: moves the same bursts as dense; only ACT joules differ). Service-time
+#: separation requires a width that actually binds — 0.5 resolves to
+#: 3 + probe = 4 of 5 valid pages.
+STATIC_FRAC = 0.5
+
+LEGS = ("dense", "static", "adaptive", "fused", "quantized")
+
+
+def _make_policy(name, recorder):
+    if name == "dense":
+        return AlwaysDense()
+    if name in ("static", "fused", "quantized"):
+        # all three serve the SAME fetch width — fused isolates kernel
+        # invariance, quantized isolates the narrow-word burst saving
+        return AlwaysSectored(topk_frac=STATIC_FRAC)
+    return AdaptiveSectorPolicy(recorder, target_coverage=0.5, deadband=0.15,
+                                frac_step=1 / 6, min_frac=1 / 6,
+                                init_frac=2 / 6, max_frac=STATIC_FRAC)
+
+
+def _requests(cfg, n, prompt_len, max_new_tokens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid,
+                    rng.integers(0, cfg.vocab,
+                                 size=prompt_len).astype(np.int32),
+                    max_new_tokens=max_new_tokens)
+            for rid in range(n)]
+
+
+def run_config(name, inner, cfg, *, scheduler, max_batch, n_requests,
+               prompt_len, max_new_tokens):
+    """One drained metered+traced run; returns the modeled-latency row."""
+    backend = MeteredBackend(inner, sectored_hw=name != "dense")
+    policy = _make_policy(name, backend.meter.recorder)
+    sched = OverlapScheduler() if scheduler == "overlap" else FifoScheduler()
+    obs = FlightRecorder()
+    sess = ServeSession(backend, max_batch=max_batch, scheduler=sched,
+                        policy=policy, obs=obs)
+    handles = [sess.submit(r) for r in
+               _requests(cfg, n_requests, prompt_len, max_new_tokens)]
+    sess.run_until_drained()
+    assert all(h.done for h in handles)
+    report = backend.meter.report()
+    snap = obs.snapshot()
+    total_ns = report["dram_ns"] + report["prefill_dram_ns"]
+    wave_ns = snap.get("wave_dram_ns", {})
+    ttft = snap.get("ttft_dram_ns", {})
+    tpot = snap.get("tpot_dram_ns", {})
+    return dict(
+        dram_ns=report["dram_ns"],
+        prefill_dram_ns=report["prefill_dram_ns"],
+        tokens=report["tokens"],
+        dram_ns_per_token=total_ns / report["tokens"],
+        decode_dram_ns_per_token=(report["dram_ns"]
+                                  / max(report["tokens"]
+                                        - report["prefill_events"], 1)),
+        wave_dram_ns=dict(p50=wave_ns.get("p50", 0.0),
+                          p99=wave_ns.get("p99", 0.0)),
+        ttft_dram_ns_p50=ttft.get("p50", 0.0),
+        tpot_dram_ns_p50=tpot.get("p50", 0.0),
+        sector_coverage=report["sector_coverage"],
+        audit_checks=report["audit_checks"],
+        audit_max_rel_err=report["audit_max_rel_err"],
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload (fewer/shorter requests)")
+    ap.add_argument("--scheduler", choices=["fifo", "overlap"],
+                    default="fifo")
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_latency.json")
+    args = ap.parse_args(argv)
+
+    n_requests = 2 if args.smoke else 4
+    prompt_len = 520  # 5 valid pages: wider than every sectored width
+    max_new_tokens = 24 if args.smoke else 48
+
+    cfg = configs.get(args.arch).reduced(n_layers=2, d_model=64, n_heads=4,
+                                         n_kv_heads=2, d_ff=128, vocab=128,
+                                         head_dim=32)
+    params = model.init_params(cfg, jax.random.key(0))
+    inner = sectored_decode.make_serving_fns(cfg, params=params,
+                                             seq_len=SEQ_LEN, min_topk=1)
+    fused = sectored_decode.make_serving_fns(cfg, params=params,
+                                             seq_len=SEQ_LEN, min_topk=1,
+                                             kernel="fused")
+    q8 = sectored_decode.make_serving_fns(cfg, params=params,
+                                          seq_len=SEQ_LEN, min_topk=1,
+                                          kernel="fused_q8")
+    backends = dict(dense=inner, static=inner, adaptive=inner,
+                    fused=fused, quantized=q8)
+
+    rows = {}
+    for name in LEGS:
+        rows[name] = run_config(
+            name, backends[name], cfg, scheduler=args.scheduler,
+            max_batch=args.max_batch, n_requests=n_requests,
+            prompt_len=prompt_len, max_new_tokens=max_new_tokens)
+        r = rows[name]
+        print(f"{name:9s} {r['dram_ns_per_token']:9.2f} ns/token "
+              f"(decode-only {r['decode_dram_ns_per_token']:8.2f}) "
+              f"wave p50/p99 {r['wave_dram_ns']['p50']:.0f}/"
+              f"{r['wave_dram_ns']['p99']:.0f} ns  "
+              f"coverage={r['sector_coverage']:.3f} "
+              f"audit<= {r['audit_max_rel_err']:.1e}")
+
+    dense_ns = rows["dense"]["dram_ns_per_token"]
+    result = dict(
+        arch=cfg.name, scheduler=args.scheduler, smoke=args.smoke,
+        seq_len=SEQ_LEN, prompt_len=prompt_len,
+        max_new_tokens=max_new_tokens, n_requests=n_requests,
+        static_frac=STATIC_FRAC,
+        dram_ns_per_token={k: rows[k]["dram_ns_per_token"] for k in rows},
+        decode_dram_ns_per_token={k: rows[k]["decode_dram_ns_per_token"]
+                                  for k in rows},
+        wave_dram_ns={k: rows[k]["wave_dram_ns"] for k in rows},
+        ttft_dram_ns_p50={k: rows[k]["ttft_dram_ns_p50"] for k in rows},
+        tpot_dram_ns_p50={k: rows[k]["tpot_dram_ns_p50"] for k in rows},
+        speedup_vs_dense={k: round(dense_ns
+                                   / rows[k]["dram_ns_per_token"], 4)
+                          for k in ("static", "adaptive", "quantized")},
+        audit=dict(
+            checks=sum(rows[k]["audit_checks"] for k in rows),
+            max_rel_err=max(rows[k]["audit_max_rel_err"] for k in rows),
+        ),
+    )
+    out = common.write_bench_json(args.out, result)
+    print(f"wrote {out}")
+    print(f"speedup vs dense: "
+          f"static={result['speedup_vs_dense']['static']:.2f}x "
+          f"adaptive={result['speedup_vs_dense']['adaptive']:.2f}x "
+          f"quantized={result['speedup_vs_dense']['quantized']:.2f}x")
+
+    static_ns = rows["static"]["dram_ns_per_token"]
+    adaptive_ns = rows["adaptive"]["dram_ns_per_token"]
+    quantized_ns = rows["quantized"]["dram_ns_per_token"]
+    if not adaptive_ns < static_ns < dense_ns:
+        raise SystemExit(
+            f"FAIL: modeled service time not strictly ordered "
+            f"adaptive < static < dense "
+            f"({adaptive_ns:.2f} / {static_ns:.2f} / {dense_ns:.2f} "
+            f"ns/token)")
+    print("OK: adaptive < static < dense modeled ns/token")
+    if (rows["fused"]["dram_ns"] != rows["static"]["dram_ns"]
+            or rows["fused"]["prefill_dram_ns"]
+            != rows["static"]["prefill_dram_ns"]):
+        raise SystemExit(
+            f"FAIL: fused kernel changed the modeled DRAM time at the "
+            f"same width — counters leaked a kernel choice "
+            f"({rows['fused']['dram_ns']} vs {rows['static']['dram_ns']})")
+    print("OK: fused == static modeled time bit-exactly "
+          "(kernel-invariant counters)")
+    if quantized_ns >= static_ns:
+        raise SystemExit(
+            f"FAIL: int8-KV service time ({quantized_ns:.2f} ns/token) "
+            f"not strictly below static ({static_ns:.2f}) at the same "
+            f"fetch width — the shortened burst bought nothing")
+    print(f"OK: quantized < static modeled ns/token "
+          f"(burst shortening worth "
+          f"{1 - quantized_ns / static_ns:.1%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -439,16 +439,19 @@ def run_obs_oracle(backend, trace, prefix_trace, *, vocab: int,
                    quiet: bool = False) -> dict:
     """The observer-effect oracle: tracing must be invisible.
 
-    Each leg runs the same trace three times — flight recorder off, on,
-    and on again — asserting (1) per-request token streams, logprobs,
-    and metered joules are bit-identical with tracing on vs. off, and
-    (2) the two traced runs serialize byte-identical span sets (the
-    export half of the contract; wall-clock never enters the span
+    Each leg runs the same trace three times — flight recorder off, on
+    (with DRAM command tracing), and on again — asserting (1)
+    per-request token streams, logprobs, and metered joules are
+    bit-identical with tracing on vs. off, and (2) the two traced runs
+    serialize byte-identical span sets AND command-timeline records
+    (the export half of the contract; wall-clock never enters either
     model). Legs: the {fifo, overlap} x {uncontended, preempting pool}
     matrix plus a warm-prefix leg. SystemExit on any violation.
 
     When ``trace_dir`` is set, one leg per group writes its JSONL +
-    Perfetto exports there (CI uploads them as artifacts).
+    Perfetto exports there, plus the DRAM command track as
+    ``*.commands.jsonl`` and merged into the Perfetto file (CI uploads
+    them as artifacts).
     """
     import json as _json
 
@@ -461,7 +464,8 @@ def run_obs_oracle(backend, trace, prefix_trace, *, vocab: int,
         for mode in ("off", "on", "on-again"):
             cache = (PrefixCache(capacity_pages=32,
                                  page_size=POOL_PAGE_SIZE) if warm else None)
-            obs = FlightRecorder() if mode != "off" else None
+            obs = (FlightRecorder(commands=True) if mode != "off"
+                   else None)
             sess = ServeSession(
                 MeteredBackend(backend), max_batch=max_batch,
                 scheduler=(OverlapScheduler() if scheduler == "overlap"
@@ -474,7 +478,8 @@ def run_obs_oracle(backend, trace, prefix_trace, *, vocab: int,
                             materialize=materialize)
             sides[mode] = _request_observables(out, out["handles"])
             if obs is not None:
-                serialized.append(_json.dumps(obs.spans(), sort_keys=True))
+                serialized.append(_json.dumps(
+                    [obs.spans(), obs.command_records], sort_keys=True))
         for key in ("tokens", "logprobs", "joules", "steps"):
             if sides["on"][key] != sides["off"][key]:
                 raise SystemExit(
@@ -483,10 +488,12 @@ def run_obs_oracle(backend, trace, prefix_trace, *, vocab: int,
         if serialized[0] != serialized[1]:
             raise SystemExit(
                 f"FAIL: two traced runs of leg {name} serialized "
-                f"different span sets — the trace is not deterministic")
+                f"different span/command sets — the trace is not "
+                f"deterministic")
         snap = obs.snapshot()
         summary[name] = dict(
             waves=snap["waves"], spans=len(obs.spans()),
+            command_records=len(obs.command_records),
             preemptions=snap.get("preemptions", 0),
             truncated=snap.get("truncated_streams", 0))
         if trace_dir is not None and export_as is not None:
@@ -495,9 +502,13 @@ def run_obs_oracle(backend, trace, prefix_trace, *, vocab: int,
                              extra=meta)
             p2 = write_perfetto(obs.spans(),
                                 trace_dir / f"{export_as}.perfetto.json",
-                                extra=meta)
+                                extra=meta,
+                                commands=obs.command_records)
+            p3 = write_jsonl(obs.command_records,
+                             trace_dir / f"{export_as}.commands.jsonl",
+                             extra=meta)
             if not quiet:
-                print(f"  trace exported: {p1}, {p2}")
+                print(f"  trace exported: {p1}, {p2}, {p3}")
         return obs
 
     last_obs = None
@@ -532,18 +543,24 @@ def run_obs_oracle(backend, trace, prefix_trace, *, vocab: int,
 def run_metered(backend, trace, *, vocab: int, temperature: float,
                 pool_pages: int | None, scheduler: str = "overlap",
                 max_batch: int = 4) -> dict:
-    """One metered leg: latency percentiles + J/token for the report."""
+    """One metered leg: latency percentiles + J/token for the report,
+    plus the modeled DRAM service-time books (``dram_ns``) — totals from
+    the meter, per-wave p50/p99 from the flight recorder's fixed-bucket
+    histogram (the deterministic estimate, not stored samples)."""
     metered = MeteredBackend(backend)
     sched = (OverlapScheduler() if scheduler == "overlap"
              else FifoScheduler())
     pool = (None if pool_pages is None
             else KVPagePool(pool_pages, page_size=POOL_PAGE_SIZE))
+    obs = FlightRecorder()
     sess = ServeSession(metered, max_batch=max_batch, scheduler=sched,
-                        policy=HysteresisPolicy(), page_pool=pool)
+                        policy=HysteresisPolicy(), page_pool=pool, obs=obs)
     out = run_trace(sess, trace, vocab=vocab, temperature=temperature)
     report = metered.meter.report()
     recs = out["per_request"]
     stats = out["stats"]
+    snap = obs.snapshot()
+    wave_ns = snap.get("wave_dram_ns", {})
     return dict(
         n_requests=len(trace), steps=out["steps"],
         tokens=report["tokens"],
@@ -552,6 +569,13 @@ def run_metered(backend, trace, *, vocab: int, temperature: float,
         j_per_token=metrics.dram_energy_per_token(report["energy_j"],
                                                   report["tokens"]),
         energy_j=report["energy_j"],
+        dram_ns=report["dram_ns"],
+        prefill_dram_ns=report["prefill_dram_ns"],
+        dram_ns_per_token=snap.get("dram_ns_per_token", 0.0),
+        wave_dram_ns=dict(p50=wave_ns.get("p50", 0.0),
+                          p99=wave_ns.get("p99", 0.0)),
+        audit_checks=report["audit_checks"],
+        audit_max_rel_err=report["audit_max_rel_err"],
         preemptions=stats["preemptions"], eos_stops=stats["eos_stops"],
         resumed_prefills=report["resumed_prefills"],
         evicted_pages=report["evicted_pages"],
@@ -671,6 +695,9 @@ def main(argv=None):
               f"tpot p50/p99: {r['tpot_steps']['p50']:4.2f}/"
               f"{r['tpot_steps']['p99']:4.2f}  "
               f"{r['j_per_token'] * 1e6:7.3f} uJ/tok  "
+              f"dram {r['dram_ns_per_token']:6.1f} ns/tok "
+              f"(wave p50/p99 {r['wave_dram_ns']['p50']:.0f}/"
+              f"{r['wave_dram_ns']['p99']:.0f})  "
               f"preempt={r['preemptions']} eos={r['eos_stops']}")
 
     payload = dict(

@@ -88,6 +88,19 @@ SPECS: dict[str, list[Metric]] = {
         _det("prefix.levels.2.j_per_token", higher=False),
         _det("prefix.levels.2.hit_rate", higher=True),
     ],
+    "BENCH_latency.json": [
+        # modeled DRAM service time (command-timeline replay): sectored
+        # legs must keep beating dense, fused must stay time-neutral, and
+        # the double-entry audit's worst divergence must stay at zero
+        _det("dram_ns_per_token.dense", higher=False),
+        _det("dram_ns_per_token.static", higher=False),
+        _det("dram_ns_per_token.adaptive", higher=False),
+        _det("dram_ns_per_token.fused", higher=False),
+        _det("dram_ns_per_token.quantized", higher=False),
+        _det("speedup_vs_dense.adaptive", higher=True),
+        _det("speedup_vs_dense.quantized", higher=True),
+        _det("audit.max_rel_err", higher=False),
+    ],
     "BENCH_traffic.json": [
         _det("patterns.poisson.steps", higher=False),
         _det("patterns.poisson.j_per_token", higher=False),

@@ -48,8 +48,12 @@ the end-of-run line grows hit-rate / shared-page / CoW columns.
 tracing on the virtual step clock plus a serving metrics registry, with
 an end-of-run summary table and optional ``--obs-trace-out`` (JSONL) /
 ``--obs-perfetto-out`` (Chrome/Perfetto ``trace_event`` JSON) exports.
-Tracing is observer-effect-free: token streams, logprobs, and joules are
-bit-identical with the flag on or off (oracle in benchmarks/traffic.py).
+``--obs-commands`` (needs ``--telemetry``) additionally records every
+metered wave's synthesized DRAM command timeline — the Perfetto export
+grows a dedicated command track and the JSONL export a ``.commands``
+sibling (see docs/observability.md). Tracing is observer-effect-free:
+token streams, logprobs, and joules are bit-identical with the flag on
+or off (oracle in benchmarks/traffic.py).
 
 Sampling (``--temperature`` > 0 turns it on): each request gets a
 ``SamplerSpec(temperature, top_k, top_p, seed=--seed + rid)`` — the
@@ -243,6 +247,12 @@ def main(argv=None):
                     help="with --obs: export the span trace as Chrome/"
                          "Perfetto trace_event JSON (open in ui.perfetto.dev "
                          "or chrome://tracing)")
+    ap.add_argument("--obs-commands", action="store_true",
+                    help="with --obs and --telemetry: record every metered "
+                         "wave's/prefill's synthesized DRAM command "
+                         "timeline; the Perfetto export grows a dedicated "
+                         "'dram commands' track and --obs-trace-out gains "
+                         "a sibling .commands.jsonl file")
     ap.add_argument("--bg-energy", action="store_true",
                     help="with --telemetry: add the modeled background/"
                          "refresh energy component (deterministic, derived "
@@ -306,6 +316,15 @@ def main(argv=None):
     if ((args.obs_trace_out or args.obs_perfetto_out) and not args.obs):
         ap.error("--obs-trace-out/--obs-perfetto-out need --obs (there is "
                  "no span trace to export without the flight recorder)")
+    if args.obs_commands and not args.obs:
+        ap.error("--obs-commands needs --obs (the command track rides on "
+                 "the flight recorder)")
+    if args.obs_commands and not (args.telemetry
+                                  or args.policy == "adaptive"):
+        # command timelines are synthesized by the meter; without it the
+        # flag would silently record nothing
+        ap.error("--obs-commands needs --telemetry (the command timeline "
+                 "is synthesized from the meter's counters)")
     if args.kv_page_size is not None and args.kv_pages is None:
         ap.error("--kv-page-size needs --kv-pages (an unbounded pool has "
                  "no page granularity to configure)")
@@ -344,7 +363,8 @@ def main(argv=None):
         cache_kwargs = ({} if args.kv_page_size is None
                         else dict(page_size=args.kv_page_size))
         prefix_cache = PrefixCache(args.prefix_cache_pages, **cache_kwargs)
-    obs = FlightRecorder(MetricsRegistry()) if args.obs else None
+    obs = (FlightRecorder(MetricsRegistry(), commands=args.obs_commands)
+           if args.obs else None)
     kernel = ("fused_q8" if args.kv_quant
               else "fused" if args.fused_kernel else "dispatch")
     sess = build_session(cfg, params, max_batch=args.max_batch,
@@ -452,6 +472,16 @@ def print_energy_report(sess, handles, *, trace_out=None) -> None:
         print(f"prefix reuse: {report['prefix_hit_tokens']} prompt tokens "
               f"served from cache; shared-fetch amortization credited "
               f"{shared_mj:.3f} mJ across co-readers")
+    total_ns = report["dram_ns"] + report["prefill_dram_ns"]
+    print(f"modeled DRAM time: {total_ns * 1e-3:.3f} us "
+          f"(decode={report['dram_ns'] * 1e-3:.3f} "
+          f"prefill={report['prefill_dram_ns'] * 1e-3:.3f}) "
+          f"| {total_ns / tokens if tokens else 0.0:.1f} ns/token "
+          f"(modeled from counters, not wall-clock)")
+    if report["audit_checks"]:
+        print(f"energy audit: {report['audit_checks']} reconciliations, "
+              f"max rel err {report['audit_max_rel_err']:.3e} "
+              f"(tolerance 1e-9)")
     for h in handles[:8]:
         t = h.telemetry
         print(f"  rid={h.rid:3d} tokens={t['tokens']:4d} "
@@ -466,16 +496,25 @@ def print_energy_report(sess, handles, *, trace_out=None) -> None:
 
 def print_obs_report(obs, *, trace_out=None, perfetto_out=None) -> None:
     """Flight-recorder summary: the metrics snapshot table plus optional
-    span-trace exports (JSONL and/or Perfetto)."""
+    span-trace exports (JSONL and/or Perfetto; command-timeline records,
+    when traced, ride along as a .commands.jsonl sibling and a dedicated
+    Perfetto track)."""
     spans = obs.spans()
+    commands = obs.command_records if obs.trace_commands else None
     print("-- flight recorder ---------------------------------------------")
-    print(f"steps={obs.step} spans={len(spans)}")
+    tag = (f" command_records={len(commands)}" if commands is not None
+           else "")
+    print(f"steps={obs.step} spans={len(spans)}{tag}")
     print(MetricsRegistry.render(obs.snapshot()))
     if trace_out:
         path = write_jsonl(spans, trace_out)
         print(f"wrote span trace: {path}")
+        if commands is not None:
+            cmd_path = write_jsonl(
+                commands, str(trace_out) + ".commands.jsonl")
+            print(f"wrote command trace: {cmd_path}")
     if perfetto_out:
-        path = write_perfetto(spans, perfetto_out)
+        path = write_perfetto(spans, perfetto_out, commands=commands)
         print(f"wrote perfetto trace: {path} "
               f"(open in ui.perfetto.dev or chrome://tracing)")
 

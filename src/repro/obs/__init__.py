@@ -6,10 +6,20 @@ on the virtual step clock and feeds a :class:`MetricsRegistry`;
 whole layer is host-side bookkeeping discovered via optional hooks, so
 enabling it cannot perturb token streams, logprobs, or metered joules
 (the observer-effect oracle — see docs/observability.md).
+
+:mod:`repro.obs.commands` synthesizes each metered wave's DRAM command
+timeline from the same host counters and replays it through the DDR4
+timing model to a modeled service time (``dram_ns``);
+:mod:`repro.obs.audit` reconciles the command ledger's joules against
+the meter's (the double-entry energy audit).
 """
 
-from .export import (TRACE_SCHEMA_VERSION, US_PER_STEP, to_trace_events,
-                     write_jsonl, write_perfetto)
+from .audit import AUDIT_REL_TOL, AuditError, max_rel_err, reconcile
+from .commands import (CommandTimeline, DramCommand, act_issue_span_ns,
+                       background_energy, column_slot_ns, prefill_commands,
+                       replay, replay_by_slot, wave_commands, with_refresh)
+from .export import (TRACE_SCHEMA_VERSION, US_PER_STEP, command_trace_events,
+                     to_trace_events, write_jsonl, write_perfetto)
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .spans import SESSION_TRACK, FlightRecorder
 
@@ -17,5 +27,9 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "FlightRecorder", "SESSION_TRACK",
     "write_jsonl", "write_perfetto", "to_trace_events",
-    "TRACE_SCHEMA_VERSION", "US_PER_STEP",
+    "command_trace_events", "TRACE_SCHEMA_VERSION", "US_PER_STEP",
+    "CommandTimeline", "DramCommand", "wave_commands", "prefill_commands",
+    "replay", "replay_by_slot", "with_refresh", "background_energy",
+    "column_slot_ns", "act_issue_span_ns",
+    "AuditError", "AUDIT_REL_TOL", "reconcile", "max_rel_err",
 ]

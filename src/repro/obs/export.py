@@ -30,7 +30,7 @@ TRACE_SCHEMA_VERSION = 1
 
 #: counter fields lifted from wave spans into Perfetto counter tracks
 COUNTER_FIELDS = ("occupancy", "pool_pages_held", "energy_j",
-                  "sector_coverage")
+                  "sector_coverage", "dram_ns")
 
 
 def _track_key(track) -> tuple:
@@ -92,13 +92,82 @@ def to_trace_events(spans: Iterable[Mapping[str, Any]],
     return events
 
 
+#: the DRAM command track renders modeled *nanoseconds* at 1 µs per ns,
+#: anchored at each wave's step window — makespans are hundreds of ns,
+#: step windows are US_PER_STEP µs wide, so command phases nest visibly
+#: inside their wave's slice without a second clock domain
+COMMAND_TRACK_PID = 1
+
+
+def command_trace_events(records: Iterable[Mapping[str, Any]],
+                         us_per_step: int = US_PER_STEP) -> list[dict]:
+    """Perfetto events for the flight recorder's DRAM command records.
+
+    One dedicated process ("dram commands"): per wave, a ``dram`` slice
+    spanning the modeled makespan with nested ``act issue`` (tFAW
+    token-bucket / tRRD-limited) and ``data bus`` (RD/WR burst
+    occupancy, offset by the tRCD+tCL fill) phase slices, plus
+    ``dram_ns`` / ``faw_tokens`` counter series. Slice ``args`` carry
+    per-kind command counts and the replay breakdown; determinism
+    matches the span exporter (open order, no wall-clock).
+    """
+    records = list(records)
+    events: list[dict] = []
+    if not records:
+        return events
+    pid = COMMAND_TRACK_PID
+    events.append({"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                   "args": {"name": "dram commands"}})
+    events.append({"ph": "M", "name": "thread_name", "pid": pid, "tid": 0,
+                   "args": {"name": "dram"}})
+    for rec in records:
+        ts0 = rec["step"] * us_per_step
+        counts: dict[str, float] = {}
+        for cmd in rec.get("commands", ()):
+            counts[cmd["kind"]] = counts.get(cmd["kind"], 0.0) + cmd["count"]
+        events.append({"ph": "C", "name": "dram_ns", "pid": pid, "tid": 0,
+                       "ts": ts0, "args": {"dram_ns": rec["dram_ns"]}})
+        events.append({"ph": "C", "name": "faw_tokens", "pid": pid,
+                       "tid": 0, "ts": ts0,
+                       "args": {"faw_tokens": rec["faw_tokens"]}})
+        if rec["dram_ns"] <= 0:
+            continue
+        events.append({"ph": "X", "name": "dram", "pid": pid, "tid": 0,
+                       "ts": ts0, "dur": rec["dram_ns"],
+                       "args": {"dram_ns": rec["dram_ns"],
+                                "act_ns": rec["act_ns"],
+                                "bus_ns": rec["bus_ns"],
+                                "n_acts": rec["n_acts"],
+                                "faw_tokens": rec["faw_tokens"],
+                                "commands": counts}})
+        if rec["act_ns"] > 0:
+            events.append({"ph": "X", "name": "act issue", "pid": pid,
+                           "tid": 0, "ts": ts0, "dur": rec["act_ns"],
+                           "args": {"n_acts": rec["n_acts"],
+                                    "faw_tokens": rec["faw_tokens"]}})
+        if rec["bus_ns"] > 0:
+            events.append({"ph": "X", "name": "data bus", "pid": pid,
+                           "tid": 0, "ts": ts0 + rec["lead_ns"],
+                           "dur": rec["bus_ns"],
+                           "args": {"bus_ns": rec["bus_ns"]}})
+    return events
+
+
 def write_perfetto(spans: Iterable[Mapping[str, Any]], path,
                    extra: Mapping[str, Any] | None = None,
-                   us_per_step: int = US_PER_STEP) -> pathlib.Path:
-    """Write a Perfetto/chrome://tracing JSON object trace; returns path."""
+                   us_per_step: int = US_PER_STEP,
+                   commands: Iterable[Mapping[str, Any]] | None = None
+                   ) -> pathlib.Path:
+    """Write a Perfetto/chrome://tracing JSON object trace; returns path.
+
+    ``commands`` optionally merges the DRAM command track
+    (:func:`command_trace_events`) beside the span tracks."""
     path = pathlib.Path(path)
+    events = to_trace_events(spans, us_per_step)
+    if commands is not None:
+        events.extend(command_trace_events(commands, us_per_step))
     payload = {"displayTimeUnit": "ms",
                "metadata": dict(extra or {}),
-               "traceEvents": to_trace_events(spans, us_per_step)}
+               "traceEvents": events}
     path.write_text(json.dumps(payload, sort_keys=True) + "\n")
     return path

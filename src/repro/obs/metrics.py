@@ -103,12 +103,43 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
+    def quantile(self, q: float) -> tuple[float, bool]:
+        """Deterministic bucket-interpolated quantile estimate.
+
+        Returns ``(estimate, from_overflow)``: linear interpolation
+        within the bucket holding the ``q``-th sample, clamped to the
+        observed ``[min, max]`` (the sidecars know more than the bucket
+        bounds do). ``from_overflow=True`` flags an estimate drawn from
+        the +inf bucket — the bounds were outgrown, so the value is only
+        bounded by the tracked ``max`` and callers should say so loudly.
+        """
+        if not self.count:
+            return 0.0, False
+        target = q * self.count
+        cum = 0.0
+        for i, c in enumerate(self.counts):
+            if c > 0 and cum + c >= target:
+                lower = self.buckets[i - 1] if i > 0 else 0.0
+                overflow = i >= len(self.buckets)
+                upper = self.max if overflow else self.buckets[i]
+                upper = max(upper, lower)
+                est = lower + (upper - lower) * ((target - cum) / c)
+                return min(max(est, self.min), self.max), overflow
+            cum += c
+        return self.max, self.counts[-1] > 0
+
     def snapshot(self):
         out = {"count": self.count, "sum": _num(self.sum),
                "mean": _num(self.mean())}
         if self.count:
             out["min"] = _num(self.min)
             out["max"] = _num(self.max)
+            out["p50"] = _num(self.quantile(0.50)[0])
+            out["p99"] = _num(self.quantile(0.99)[0])
+            if self.counts[-1]:
+                # loud: samples landed beyond the top bound, so bucket
+                # estimates (p50/p99 included) clamp to the tracked max
+                out["overflow"] = self.counts[-1]
         out["buckets"] = {_bucket_label(self.buckets, i): c
                           for i, c in enumerate(self.counts) if c}
         return out
@@ -179,7 +210,12 @@ class MetricsRegistry:
                     desc = (f"count={val['count']} mean={val['mean']:.6g}"
                             if val["count"] else "count=0")
                     if val.get("count"):
-                        desc += f" min={val['min']:.6g} max={val['max']:.6g}"
+                        desc += (f" p50={val['p50']:.6g} "
+                                 f"p99={val['p99']:.6g} "
+                                 f"min={val['min']:.6g} max={val['max']:.6g}")
+                    if val.get("overflow"):
+                        desc += (f" OVERFLOW={val['overflow']} (beyond top "
+                                 f"bucket; estimates clamp to max)")
                 else:  # gauge
                     desc = (f"{val['value']:.6g} "
                             f"(min={val['min']:.6g} max={val['max']:.6g})")

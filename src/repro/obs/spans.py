@@ -36,10 +36,15 @@ from .metrics import MetricsRegistry
 #: byte-identical-export half of the observer-effect oracle)
 WAVE_ENERGY_FIELDS = ("energy_j", "act_j", "rd_j", "wr_j", "pages_fetched",
                       "pages_valid", "sector_coverage", "attn_mass",
-                      "attn_mass_raw", "k_pages")
+                      "attn_mass_raw", "k_pages", "dram_ns")
 
 #: histogram buckets for per-wave joules (DRAM waves sit well under 1 J)
 ENERGY_BUCKETS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0)
+
+#: histogram buckets for modeled DRAM service times (nanoseconds): decode
+#: waves run hundreds of ns, prefill passes tens of µs
+DRAM_NS_BUCKETS = (50.0, 100.0, 250.0, 500.0, 1e3, 2.5e3, 5e3, 1e4,
+                   2.5e4, 5e4, 1e5, 2.5e5)
 
 SESSION_TRACK = "session"
 
@@ -52,7 +57,8 @@ class FlightRecorder:
     in :mod:`repro.obs.export`.
     """
 
-    def __init__(self, metrics: MetricsRegistry | None = None):
+    def __init__(self, metrics: MetricsRegistry | None = None,
+                 commands: bool = False):
         self.step = 0
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._spans: list[dict[str, Any]] = []  # in open order (stable)
@@ -62,6 +68,13 @@ class FlightRecorder:
         self.pool = None
         self.prefix_cache = None
         self.meter = None
+        # DRAM command tracing (``commands=True``): keep each metered
+        # wave's/prefill's replayed command timeline as a JSON-ready
+        # record for the command-track exports. Pure copies of host
+        # bookkeeping the meter produced anyway — the observer-effect
+        # contract extends to this flag (benchmarks/traffic.py oracle).
+        self.trace_commands = commands
+        self.command_records: list[dict[str, Any]] = []
 
     # -- wiring ------------------------------------------------------------
 
@@ -139,9 +152,20 @@ class FlightRecorder:
         self.metrics.counter(f"prefill_{mode}").inc()
         if hit:
             self.metrics.counter("prefix_hit_tokens").inc(hit)
-        self._instant(rid, "prefill", attrs={
+        prefill_attrs = {
             "mode": mode, "slot": slot, "prefix_hit_tokens": hit,
-            "prefill_tokens": handle.prefill_len})
+            "prefill_tokens": handle.prefill_len}
+        tl = (self.meter.prefill_timelines.get(rid)
+              if self.meter is not None else None)
+        if tl is not None:
+            prefill_attrs["dram_ns"] = tl.dram_ns
+            self.metrics.histogram("prefill_dram_ns",
+                                   DRAM_NS_BUCKETS).observe(tl.dram_ns)
+            if self.trace_commands:
+                self.command_records.append(tl.to_record(
+                    step=self.step, kind="prefill", rid=rid,
+                    seq=len(self.command_records)))
+        self._instant(rid, "prefill", attrs=prefill_attrs)
         self._open_span(rid, "running", attrs={"slot": slot, "mode": mode})
 
     def on_preempt(self, slot: int, handle) -> None:
@@ -166,6 +190,21 @@ class FlightRecorder:
         if root is not None:
             self.metrics.histogram("request_steps").observe(
                 self.step - root["start"])
+        if self.meter is not None:
+            # modeled latency rollup: TTFT is the prefill pass's DRAM
+            # service time, TPOT the per-token share of the decode waves
+            # the request sat through — modeled ns, never wall-clock
+            stats = self.meter.request_stats(rid)
+            if stats and stats.get("prefill_dram_ns", 0.0) > 0:
+                self.metrics.histogram("ttft_dram_ns",
+                                       DRAM_NS_BUCKETS).observe(
+                    stats["prefill_dram_ns"])
+                tokens = stats.get("tokens", 0)
+                if tokens > 1:
+                    decode_ns = stats["dram_ns"] - stats["prefill_dram_ns"]
+                    self.metrics.histogram("tpot_dram_ns",
+                                           DRAM_NS_BUCKETS).observe(
+                        decode_ns / (tokens - 1))
 
     def on_truncated(self, handle=None) -> None:
         """A ``StreamTruncated`` overran the step budget: the request (or
@@ -185,11 +224,14 @@ class FlightRecorder:
         self.metrics.gauge("pool_pages_held").set(held_pages)
 
     def on_wave(self, *, active_rids: list[tuple[int, int]], produced: int,
-                sectored: bool, energy: Mapping | None) -> None:
+                sectored: bool, energy: Mapping | None,
+                timeline=None) -> None:
         """One decode wave just completed (called after the meter, if any,
         recorded it). ``active_rids`` is [(slot, rid), ...] captured
         before finished slots vacated; ``energy`` is the meter's wave
-        record (deterministic fields are copied, wall-clock is not)."""
+        record (deterministic fields are copied, wall-clock is not);
+        ``timeline`` is the meter's replayed ``CommandTimeline`` for the
+        wave (recorded when command tracing is on)."""
         m = self.metrics
         m.counter("waves").inc()
         m.counter("tokens_emitted").inc(produced)
@@ -215,6 +257,19 @@ class FlightRecorder:
                 m.counter("energy_j_total").inc(attrs["energy_j"])
                 m.histogram("wave_energy_j", ENERGY_BUCKETS).observe(
                     attrs["energy_j"])
+            if "dram_ns" in attrs:
+                m.counter("dram_ns_total").inc(attrs["dram_ns"])
+                m.histogram("wave_dram_ns", DRAM_NS_BUCKETS).observe(
+                    attrs["dram_ns"])
+        if self.meter is not None:
+            # double-entry audit books (pure reads of meter totals)
+            m.gauge("audit_checks").set(self.meter.totals["audit_checks"])
+            m.gauge("audit_max_rel_err").set(
+                self.meter.totals["audit_max_rel_err"])
+        if self.trace_commands and timeline is not None:
+            self.command_records.append(timeline.to_record(
+                step=self.step, kind="wave", seq=len(self.command_records),
+                sectored=sectored))
         if self.prefix_cache is not None:
             m.gauge("prefix_hit_rate").set(self.prefix_cache.hit_rate)
         # the wave owns the step interval it just executed: [step, step+1)
@@ -230,4 +285,7 @@ class FlightRecorder:
         energy = snap.get("energy_j_total")
         if energy is not None and tokens:
             snap["j_per_token"] = float(energy) / float(tokens)
+        dram = snap.get("dram_ns_total")
+        if dram is not None and tokens:
+            snap["dram_ns_per_token"] = float(dram) / float(tokens)
         return snap

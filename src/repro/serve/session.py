@@ -1151,8 +1151,11 @@ class ServeSession:
         if self.obs is not None:
             energy = (self.meter.recorder.window(1)[-1]
                       if self.meter is not None else None)
+            timeline = (self.meter.last_timeline
+                        if self.meter is not None else None)
             self.obs.on_wave(active_rids=active_rids, produced=produced,
-                             sectored=use_sectored, energy=energy)
+                             sectored=use_sectored, energy=energy,
+                             timeline=timeline)
         return produced
 
     def _meter_wave_info(self, active: list[int], decision,

@@ -25,6 +25,17 @@ wall-clock or device timings — so two schedulers that produce the same
 token stream report bit-identical joules. Wall-clock is recorded per wave
 for throughput reporting but is deliberately excluded from energy.
 
+Every metered wave/prefill is additionally synthesized into a DRAM
+command timeline (``repro.obs.commands``) from the same counters and
+replayed through the DDR4 timing model: ``dram_ns`` on wave records and
+per-request stats is the modeled DRAM-limited service time (the paper's
+tFAW-relaxation performance side), and the command ledger's joules are
+reconciled against this meter's every wave — the double-entry energy
+audit (``repro.obs.audit``, on by default; ``audit=False`` opts out).
+The modeled background busy window is the timeline's *makespan* (ACT
+issue legally overlapped under the tFAW token bucket / tRRD), not a
+serialized ``acts * tRC`` sum.
+
 Metering attaches via :class:`MeteredBackend`, a decorator over any
 ``DecodeBackend``. The session discovers the meter through the backend's
 ``meter`` attribute; a plain backend has none and the metering branches
@@ -40,7 +51,8 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core import power
-from repro.core.sectors import BLOCK_BYTES
+from repro.obs import audit as energy_audit
+from repro.obs import commands as dram_commands
 from repro.telemetry.recorder import TraceRecorder
 
 
@@ -132,6 +144,12 @@ def _zero_totals() -> dict[str, float]:
                 pages_fetched=0.0, pages_valid=0.0, acts=0, sectors=0.0,
                 act_j=0.0, rd_j=0.0, wr_j=0.0, prefill_j=0.0, wall_s=0.0,
                 bg_j=0.0, ref_j=0.0, busy_ns=0.0, demand_merges=0,
+                # modeled DRAM-limited service time (ns) from the command
+                # timeline replay: decode waves and prefill passes
+                # separately, plus the double-entry audit's books —
+                # reconciliations run and the worst relative error seen
+                dram_ns=0.0, prefill_dram_ns=0.0,
+                audit_checks=0, audit_max_rel_err=0.0,
                 # decode-fetch byte books: bytes actually moved by sectored
                 # decode reads, and the bytes per-sector int8 quantization
                 # shaved off them (kv_word_fraction < 1) — both derived
@@ -157,7 +175,7 @@ class WaveMeter:
                  energy_model: power.DRAMEnergyModel | None = None,
                  sectored_hw: bool = True,
                  mesh_shape: tuple[int, ...] | None = None,
-                 background: bool = False):
+                 background: bool = False, audit: bool = True):
         if geometry is None:
             raise ValueError(
                 "WaveMeter needs a KVGeometry: pass one explicitly or meter "
@@ -182,6 +200,21 @@ class WaveMeter:
         # deployment property: False models the coarse-grained DRAM baseline
         # (full-row ACTs, every valid page moved, no sector-logic overhead)
         self.sectored_hw = sectored_hw
+        # double-entry audit: every wave/prefill's command-ledger joules
+        # must reconcile with this meter's (repro.obs.audit). On by
+        # default — the check is pure host float math and a divergence is
+        # always a bug worth failing loudly on.
+        self.audit = audit
+        # the most recent replayed command timelines, for the flight
+        # recorder's command track (ServeSession hands them to
+        # FlightRecorder.on_wave) and for tests
+        self.last_timeline: dram_commands.CommandTimeline | None = None
+        self.last_prefill_timeline: dram_commands.CommandTimeline | None = None
+        # latest prefill timeline per rid (a resume overwrites): the
+        # flight recorder reads these at admit time for the prefill
+        # command records — group prefills admit after several
+        # record_prefill calls, so "last" alone would misattribute
+        self.prefill_timelines: dict[int, dram_commands.CommandTimeline] = {}
         self.totals = _zero_totals()
         self.per_request: dict[int, dict[str, float]] = {}
 
@@ -190,7 +223,8 @@ class WaveMeter:
     def _req(self, rid: int) -> dict[str, float]:
         return self.per_request.setdefault(
             rid, dict(energy_j=0.0, tokens=0, prefill_tokens=0,
-                      pages_fetched=0.0, pages_valid=0.0, evictions=0))
+                      pages_fetched=0.0, pages_valid=0.0, evictions=0,
+                      dram_ns=0.0, prefill_dram_ns=0.0))
 
     def request_stats(self, rid: int) -> dict[str, float] | None:
         stats = self.per_request.get(rid)
@@ -198,29 +232,40 @@ class WaveMeter:
 
     # -- background / refresh (modeled, deterministic) ---------------------
 
-    def _background_charge(self, fetch_acts: float, fetched_units: float,
-                           appended_tokens: float) -> tuple[float, float,
-                                                            float]:
-        """(busy_ns, bg_j, ref_j) for one slot's access bundle.
+    def _background_charge(self, timeline: dram_commands.CommandTimeline
+                           ) -> tuple[float, float, float]:
+        """(busy_ns, bg_j, ref_j) for one access bundle's timeline.
 
-        The busy time is a *model*, not a measurement: row cycles
-        (``acts x tRC``) plus data-bus bursts for the blocks actually
-        moved (reads + the token append), per layer — all quantities the
-        meter already derives from host-side counters, so the charge is
-        scheduler- and mesh-invariant like every other joule here.
-        Standby power is ``IDD3N``-class active background
-        (``p_background_active``); refresh is the tREFI-amortized
-        average (``p_refresh``), both over the same modeled window.
+        The busy window is the command timeline's *makespan*
+        (``CommandTimeline.dram_ns``): ACT issue legally overlapped under
+        the tFAW token bucket with its tRRD floor, data-bus bursts, the
+        one pipelined row-open/precharge overhead. (The previous model
+        summed ``acts * tRC`` serially, overstating the window by the
+        overlap the token bucket permits — exactly the latency slack the
+        paper's §4.1 mechanism exploits.) Still a *model* from host-side
+        counters, never a measurement, so the charge stays scheduler- and
+        mesh-invariant. Standby power is ``IDD3N``-class active
+        background (``p_background_active``); refresh is the
+        tREFI-amortized average (``p_refresh``), both over this window.
         """
-        g, t = self.geometry, self.model.timing
-        blocks = g.n_layers * (fetched_units * g.page_kv_bytes
-                               + appended_tokens * g.token_kv_bytes) \
-            / BLOCK_BYTES
-        busy_ns = (g.n_layers * fetch_acts * t.tRC
-                   + blocks * t.full_burst_time)
+        busy_ns = timeline.dram_ns
         busy_s = busy_ns * 1e-9
         return (busy_ns, self.model.p_background_active * busy_s,
                 self.model.p_refresh * busy_s)
+
+    # -- double-entry audit ------------------------------------------------
+
+    def _run_audit(self, meter_side: dict[str, float],
+                   command_side: dict[str, float], *, where: str) -> None:
+        """Reconcile this meter's entry against the command ledger's
+        (raises ``repro.obs.audit.AuditError`` on divergence) and keep
+        the running worst-case books for reports/metrics."""
+        ledger = energy_audit.reconcile(meter_side, command_side,
+                                        where=where)
+        self.totals["audit_checks"] += 1
+        self.totals["audit_max_rel_err"] = max(
+            self.totals["audit_max_rel_err"],
+            energy_audit.max_rel_err(ledger))
 
     # -- recording hooks ---------------------------------------------------
 
@@ -261,6 +306,18 @@ class WaveMeter:
             suffix_frac * (fetch["act_j"] + fetch["rd_j"])
             + (prompt_len - cached) * power.kv_append_energy(
                 g.token_kv_bytes, model=self.model))
+        # second entry: the same prefill synthesized as a command stream
+        # (independent attribution arithmetic) and replayed to a modeled
+        # service time — warm admissions shorten the timeline too
+        tl = dram_commands.replay(dram_commands.prefill_commands(
+            g, prompt_len=prompt_len, cached_tokens=cached, rid=rid,
+            sectored_hw=self.sectored_hw, model=self.model),
+            self.model.timing)
+        if self.background:
+            tl = dram_commands.with_refresh(tl, model=self.model)
+        self.last_prefill_timeline = tl
+        self.prefill_timelines[rid] = tl
+        self.totals["prefill_dram_ns"] += tl.dram_ns
         self.totals["prefill_events"] += 1
         self.totals["prefill_tokens"] += prompt_len
         self.totals["prefix_hit_tokens"] += cached
@@ -274,14 +331,26 @@ class WaveMeter:
         req["energy_j"] += joules
         req["prefill_tokens"] += prompt_len
         req["tokens"] += 1
+        req["dram_ns"] += tl.dram_ns
+        req["prefill_dram_ns"] += tl.dram_ns
+        bg_j = ref_j = 0.0
         if self.background:
-            busy_ns, bg_j, ref_j = self._background_charge(
-                suffix_frac * fetch["acts"], suffix_frac * valid_units,
-                prompt_len - cached)
+            busy_ns, bg_j, ref_j = self._background_charge(tl)
             self.totals["busy_ns"] += busy_ns
             self.totals["bg_j"] += bg_j
             self.totals["ref_j"] += ref_j
             req["energy_j"] += bg_j + ref_j
+        if self.audit:
+            meter_side = dict(prefill_j=joules)
+            command_side = dict(prefill_j=tl.act_j + tl.rd_j + tl.wr_j)
+            if self.background:
+                meter_side.update(bg_j=bg_j, ref_j=ref_j)
+                command_side.update(
+                    bg_j=dram_commands.background_energy(tl,
+                                                         model=self.model),
+                    ref_j=tl.ref_j)
+            self._run_audit(meter_side, command_side,
+                            where=f"prefill rid={rid}")
 
     def record_eviction(self, rid: int, *, kv_tokens: int,
                         kv_pages: int) -> None:
@@ -391,13 +460,6 @@ class WaveMeter:
             req["tokens"] += 1
             req["pages_fetched"] += fetched_units
             req["pages_valid"] += valid_units
-            if self.background:
-                busy_ns, bg_j, ref_j = self._background_charge(
-                    fetch["acts"], fetched_units, 1.0)
-                wave["busy_ns"] += busy_ns
-                wave["bg_j"] += bg_j
-                wave["ref_j"] += ref_j
-                req["energy_j"] += bg_j + ref_j
             if (sectored and k_pages is not None and state_views is not None
                     and slot in state_views):
                 table, _ = state_views[slot]
@@ -407,6 +469,51 @@ class WaveMeter:
                 if table.ndim == 3 and table.shape[-1] >= 1:
                     masses.append(attn_mass_captured(
                         table, position, g.page_size, k_pages))
+
+        # second entry: the whole wave synthesized as one command stream
+        # (independent re-derivation of fetch widths, caps, and the
+        # shared-fetch keep factor) and replayed through the DDR4 timing
+        # model — the wave's modeled DRAM-limited service time
+        cmds = dram_commands.wave_commands(
+            g, sectored=sectored, k_pages=k_pages, slots=slots,
+            shared_groups=shared_groups, sectored_hw=self.sectored_hw,
+            model=self.model)
+        tl = dram_commands.replay(cmds, self.model.timing)
+        if self.background:
+            # one rank, one window: the wave's makespan is the busy span,
+            # charged once and split across residents in proportion to
+            # each slot's own sub-stream makespan (deterministic, sums
+            # exactly to the wave total)
+            slot_spans = {
+                s: sub.dram_ns for s, sub in
+                dram_commands.replay_by_slot(cmds, self.model.timing).items()}
+            total_span = sum(slot_spans.values())
+            tl = dram_commands.with_refresh(tl, model=self.model)
+            busy_ns, bg_j, ref_j = self._background_charge(tl)
+            wave["busy_ns"] = busy_ns
+            wave["bg_j"] = bg_j
+            wave["ref_j"] = ref_j
+            for slot, rid, _position in slots:
+                frac = (slot_spans.get(slot, 0.0) / total_span
+                        if total_span > 0 else 1.0 / len(slots))
+                self._req(rid)["energy_j"] += (bg_j + ref_j) * frac
+        self.last_timeline = tl
+        for _slot, rid, _position in slots:
+            # latency is experienced, not divided: every resident request
+            # waits out the whole wave's DRAM service window
+            self._req(rid)["dram_ns"] += tl.dram_ns
+        if self.audit:
+            meter_side = dict(act_j=wave["act_j"], rd_j=wave["rd_j"],
+                              wr_j=wave["wr_j"])
+            command_side = dict(act_j=tl.act_j, rd_j=tl.rd_j, wr_j=tl.wr_j)
+            if self.background:
+                meter_side.update(bg_j=wave["bg_j"], ref_j=wave["ref_j"])
+                command_side.update(
+                    bg_j=dram_commands.background_energy(tl,
+                                                         model=self.model),
+                    ref_j=tl.ref_j)
+            self._run_audit(meter_side, command_side,
+                            where=f"wave {self.totals['waves']}")
 
         t = self.totals
         t["waves"] += 1
@@ -422,6 +529,7 @@ class WaveMeter:
         t["bg_j"] += wave["bg_j"]
         t["ref_j"] += wave["ref_j"]
         t["busy_ns"] += wave["busy_ns"]
+        t["dram_ns"] += tl.dram_ns
         t["fetched_bytes"] += wave["fetched_bytes"]
         t["quant_saved_bytes"] += wave["quant_saved_bytes"]
         t["wall_s"] += wall_s
@@ -435,6 +543,7 @@ class WaveMeter:
             acts=wave["acts"],
             act_j=wave["act_j"], rd_j=wave["rd_j"], wr_j=wave["wr_j"],
             energy_j=wave["act_j"] + wave["rd_j"] + wave["wr_j"],
+            dram_ns=tl.dram_ns,
             wall_s=wall_s,
             sector_coverage=(wave["fetched"] / wave["valid"]
                              if wave["valid"] > 0 else 1.0),
@@ -499,7 +608,8 @@ class MeteredBackend:
                  recorder: TraceRecorder | None = None,
                  geometry: KVGeometry | None = None,
                  energy_model: power.DRAMEnergyModel | None = None,
-                 sectored_hw: bool = True, background: bool = False):
+                 sectored_hw: bool = True, background: bool = False,
+                 audit: bool = True):
         self.inner = inner
         if meter is None:
             if geometry is None:
@@ -512,7 +622,7 @@ class MeteredBackend:
             meter = WaveMeter(geometry, recorder=recorder,
                               energy_model=energy_model,
                               sectored_hw=sectored_hw,
-                              background=background)
+                              background=background, audit=audit)
         self.meter = meter
 
     # data path: identity-stable delegation ---------------------------------

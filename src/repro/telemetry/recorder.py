@@ -133,7 +133,8 @@ class TraceRecorder:
         totals: dict[str, float] = collections.defaultdict(float)
         for rec in records:
             for key in ("energy_j", "act_j", "rd_j", "wr_j", "tokens",
-                        "pages_fetched", "pages_valid", "acts", "wall_s"):
+                        "pages_fetched", "pages_valid", "acts", "wall_s",
+                        "dram_ns"):
                 value = rec.get(key)
                 if value is not None:
                     totals[key] += float(value)
